@@ -1,0 +1,20 @@
+"""Paper Fig. 9: communication frequency robustness — more local epochs
+between averages (lower frequency) at a fixed total-epoch budget."""
+from benchmarks.flbench import QUICK, csv_line, run_case
+
+TOTAL_EPOCHS = 12 if QUICK else 24
+
+
+def main():
+    rows = []
+    for e in [1, 4]:
+        for method in ["fedavg", "fed2"]:
+            rec = run_case(f"freq_{method}_E{e}", method, cpn=5, nodes=6,
+                           local_epochs=e, rounds=TOTAL_EPOCHS // e)
+            rows.append(rec)
+            print(csv_line(rec, f",E={e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Paper Fig. 7: accuracy vs computational effort (total local epochs) —
+Fed2 at different local-epoch settings vs FedAvg."""
+from benchmarks.flbench import csv_line, run_case
+
+
+def main():
+    rows = []
+    for method in ["fedavg", "fed2"]:
+        for e in [1, 2]:
+            rec = run_case(f"compute_eff_{method}_E{e}", method, alpha=0.5,
+                           nodes=6, local_epochs=e)
+            rows.append(rec)
+            print(csv_line(rec, f",E={e},total_epochs={rec['rounds'] * e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Paper Fig. 6: convergence rate (accuracy vs communication round),
+Dirichlet(0.5) heterogeneity, all four methods."""
+from benchmarks.flbench import csv_line, run_case
+
+
+def main():
+    rows = []
+    for method in ["fedavg", "fedprox", "fedma", "fed2"]:
+        rec = run_case(f"convergence_{method}", method, alpha=0.5, nodes=6)
+        rows.append(rec)
+        accs = ",".join(f"{a:.3f}" for a in rec["acc"])
+        print(csv_line(rec, f",acc_curve=[{accs}]"))
+    best = max(rows, key=lambda r: r["best_acc"])
+    print(f"convergence_winner,{0:.0f},method={best['method']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

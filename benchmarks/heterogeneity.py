@@ -1,0 +1,20 @@
+"""Paper Table 1: data heterogeneity N x C sweep (IID -> non-IID),
+VGG9 + MobileNet families."""
+from benchmarks.flbench import N_CLASSES, csv_line, run_case
+
+
+def main():
+    rows = []
+    # CPU-budget extent: vgg9 full sweep, mobilenet at the skew extreme
+    cases = [("vgg9", c) for c in (3, 5, N_CLASSES)] + [("mobilenet", 3)]
+    for arch, cpn in cases:
+        for method in ["fedavg", "fed2"]:
+            rec = run_case(f"het_{arch}_{method}_c{cpn}", method,
+                           arch=arch, cpn=cpn, nodes=6, rounds=6)
+            rows.append(rec)
+            print(csv_line(rec, f",cpn={cpn}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Paper Table 2: node scalability (nodes sweep at fixed 5-classes-per-node
+heterogeneity)."""
+from benchmarks.flbench import csv_line, run_case
+
+
+def main():
+    rows = []
+    for nodes in [4, 12]:
+        for method in ["fedavg", "fed2"]:
+            rec = run_case(f"nodes_{method}_n{nodes}", method, cpn=5,
+                           nodes=nodes, rounds=6)
+            rows.append(rec)
+            print(csv_line(rec, f",nodes={nodes}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

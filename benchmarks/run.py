@@ -1,0 +1,49 @@
+"""Benchmark orchestrator: one module per paper table/figure + infra
+benchmarks. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  REPRO_BENCH_SET=infra PYTHONPATH=src python -m benchmarks.run
+"""
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    which = os.environ.get("REPRO_BENCH_SET", "all")
+    fl_modules = [
+        "benchmarks.convergence",         # Fig. 6
+        "benchmarks.compute_efficiency",  # Fig. 7
+        "benchmarks.heterogeneity",       # Table 1
+        "benchmarks.node_scaling",        # Table 2
+        "benchmarks.comm_frequency",      # Fig. 9
+        "benchmarks.sensitivity_depth",   # Fig. 10
+        "benchmarks.sensitivity_groups",  # Fig. 11
+        "benchmarks.sensitivity_norm",    # Fig. 12
+    ]
+    infra_modules = [
+        "benchmarks.kernel_bench",
+        "benchmarks.roofline",
+    ]
+    # infra first: the roofline table is the most load-bearing output
+    mods = (infra_modules + fl_modules if which == "all" else
+            infra_modules if which == "infra" else fl_modules)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod = __import__(name, fromlist=["main"])
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

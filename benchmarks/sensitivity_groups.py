@@ -1,0 +1,17 @@
+"""Paper Fig. 11: number-of-groups sensitivity (G sweep)."""
+from benchmarks.flbench import csv_line, model_cfg, run_case
+
+
+def main():
+    rows = []
+    for g in [2, 5]:
+        rec = run_case(f"groups_fed2_g{g}", "fed2", cpn=5, nodes=6,
+                       rounds=6,
+                       cfg=model_cfg("vgg9", "fed2", groups=g, decouple=2))
+        rows.append(rec)
+        print(csv_line(rec, f",groups={g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

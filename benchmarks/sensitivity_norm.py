@@ -1,0 +1,18 @@
+"""Paper Fig. 12: normalization strategy — {fedavg, fed2} x {none, bn, gn}.
+The paper's claim: GN hurts FedAvg but helps Fed2 (group-consistent stats)."""
+from benchmarks.flbench import csv_line, model_cfg, run_case
+
+
+def main():
+    rows = []
+    for method, norm in [("fedavg", "none"), ("fedavg", "gn"),
+                         ("fed2", "bn"), ("fed2", "gn")]:
+        rec = run_case(f"norm_{method}_{norm}", method, cpn=4, nodes=6,
+                       rounds=6, cfg=model_cfg("vgg9", method, norm=norm))
+        rows.append(rec)
+        print(csv_line(rec, f",norm={norm}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Pytree checkpointing: flat-path npz + json manifest (no deps)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(params):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(path: str, params, *, step: int = 0, extra: dict = None):
+    os.makedirs(path, exist_ok=True)
+    arrays, _ = _flatten(params)
+    np.savez(os.path.join(path, "params.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, like_params):
+    """Restore into the structure of ``like_params`` (shape/dtype checked)."""
+    with np.load(os.path.join(path, "params.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_params)
+    leaves = []
+    for pth, leaf in flat:
+        key = "/".join(str(p) for p in pth)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        a = arrays[key]
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {a.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(a, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

@@ -1,0 +1,31 @@
+"""Config registry: 10 assigned architectures + the paper's own CNNs.
+
+Each arch module exposes ``full()`` (the exact assigned config) and
+``reduced()`` (<=2 layers, d_model<=512, <=4 experts — for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ASSIGNED_ARCHS = (
+    "whisper-base", "zamba2-2.7b", "qwen2-7b", "deepseek-v2-236b",
+    "mixtral-8x22b", "h2o-danube-1.8b", "llama3.2-1b", "internvl2-2b",
+    "stablelm-12b", "mamba2-1.3b",
+)
+PAPER_ARCHS = ("vgg9", "vgg16", "mobilenet")
+
+
+def _module(arch_id: str):
+    name = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch_id: str, *, reduced: bool = False, **overrides):
+    mod = _module(arch_id)
+    cfg = mod.reduced(**overrides) if reduced else mod.full(**overrides)
+    return cfg
+
+
+def input_shapes():
+    from repro.configs.shapes import INPUT_SHAPES
+    return INPUT_SHAPES

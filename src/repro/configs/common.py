@@ -1,0 +1,29 @@
+"""Shared helpers for arch configs."""
+import dataclasses
+
+import jax.numpy as jnp
+
+
+def with_fed2(cfg, groups: int = 8, decouple: int | None = None):
+    """Apply Fed2 structure adaptation to a transformer config: the last
+    ``decouple`` blocks get block-diagonal FFNs, the unembedding becomes
+    block-diagonal over vocab clusters (DESIGN.md §3)."""
+    if decouple is None:
+        decouple = max(1, min(6, cfg.n_layers // 4))
+    if cfg.family in ("ssm", "hybrid"):
+        # channel grouping for SSM mixers is carried by Fed2 fusion group
+        # maps (core/grouping.py); block-diagonal unembed still applies.
+        decouple = 0
+    if cfg.family == "moe":
+        # experts ARE the isolated structure groups (DESIGN.md §3); fusion
+        # pairs experts by logit signature, FFN stays expert-partitioned.
+        decouple = 0
+    if decouple > 0:
+        assert cfg.d_model % groups == 0 and cfg.d_ff % groups == 0, \
+            (cfg.arch_id, groups)
+    return dataclasses.replace(cfg, fed2_groups=groups,
+                               fed2_decouple=decouple)
+
+
+FULL_DTYPE = jnp.bfloat16
+REDUCED_DTYPE = jnp.float32

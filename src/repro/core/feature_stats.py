@@ -1,0 +1,148 @@
+"""Feature interpretation (paper §3.1).
+
+Class preference vector of a neuron (Eq. 9):
+    P = [p_1 .. p_C],  p_c = sum_b A(x_{c,b}) * dZ_c / dA(x_{c,b})
+where A is the neuron's (spatially pooled) activation on class-c inputs and
+Z_c the class-c logit. The layer-wise feature divergence is the total
+variance of the per-neuron vectors (Eq. 17):
+    TV_l = (1/I) sum_i || P_{l,i} - E(P_l) ||_2
+
+Implementation: the CNN forward exposes "taps" (per weight-layer activations)
+through additive zero offsets, so dZ_c/dA is an ordinary jax.grad w.r.t. the
+offsets. One backward pass per class (C passes total, CIFAR scale).
+
+``feature_stats`` Pallas kernel (kernels/feature_stats) fuses the batched
+A * dZ/dA reduction for the hot path; this module is the reference/driver.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cnn as cnn_lib
+
+
+def apply_cnn_with_taps(params, cfg: cnn_lib.CNNConfig, x, tap_offsets=None):
+    """Forward returning (logits, taps): taps[i] = post-activation of weight
+    layer i, spatially pooled to (B, C_i). ``tap_offsets`` (same structure,
+    broadcastable) are added to the raw activations — pass zeros and
+    differentiate w.r.t. them to get dZ/dA."""
+    metas = cnn_lib.layer_meta(cfg)
+    conv_metas = [m for m in metas if m.kind in ("c", "dw")]
+    fc_metas = [m for m in metas if m.kind in ("fc", "logits")]
+    taps = []
+    ti = 0
+
+    def tap(h):
+        nonlocal ti
+        if tap_offsets is not None:
+            h = h + tap_offsets[ti]
+        taps.append(h)
+        ti += 1
+        return h
+
+    ci = 0
+    for step in cfg.plan:
+        if step[0] == "p":
+            x = cnn_lib._maxpool(x)
+            continue
+        m, layer = conv_metas[ci], params["convs"][ci]
+        if m.kind == "dw":
+            x = jax.nn.relu(cnn_lib.conv2d_apply(layer["dw"], x,
+                                                 stride=m.stride,
+                                                 groups=m.c_in))
+            x = cnn_lib.conv2d_apply(layer["w"], x, groups=m.groups)
+        else:
+            x = cnn_lib.conv2d_apply(layer, x, stride=m.stride,
+                                     groups=m.groups)
+        x = jax.nn.relu(cnn_lib._apply_norm(cfg, layer, x))
+        x = tap(x)
+        ci += 1
+    if cfg.is_mobilenet:
+        x = jnp.mean(x, axis=(1, 2))
+    else:
+        g = max(cfg.fed2_groups, 1)
+        if cfg.fed2_groups and x.shape[-1] % g == 0:
+            x = cnn_lib._grouped_flatten(x, g)
+        else:
+            x = x.reshape(x.shape[0], -1)
+    from repro.models.layers import dense_apply, grouped_dense_apply
+    for i, (m, fc) in enumerate(zip(fc_metas, params["fcs"])):
+        x = (grouped_dense_apply if m.grouped_fc else dense_apply)(fc, x)
+        if m.kind != "logits":
+            x = jax.nn.relu(x)
+            x = tap(x)
+    return x[:, :cfg.n_classes], taps
+
+
+def _pool_tap(t):
+    """Spatially pool a tap to (B, neurons)."""
+    if t.ndim == 4:
+        return jnp.mean(t, axis=(1, 2))
+    return t
+
+
+def class_preference_vectors(params, cfg, images, labels, *,
+                             use_kernel: bool = False):
+    """Compute P (Eq. 9) for every tapped layer.
+
+    Returns list of arrays, layer i -> (n_neurons_i, n_classes).
+    """
+    n_cls = cfg.n_classes
+
+    # tap structure (shapes) from a probe run
+    _, probe_taps = apply_cnn_with_taps(params, cfg, images)
+    zeros = [jnp.zeros_like(t) for t in probe_taps]
+
+    def confidence(offsets, c):
+        logits, _ = apply_cnn_with_taps(params, cfg, images, offsets)
+        sel = (labels == c).astype(logits.dtype)
+        return jnp.sum(logits[:, c] * sel)
+
+    grad_fn = jax.grad(confidence)
+
+    acts = [_pool_tap(t) for t in probe_taps]  # (B, I_l)
+
+    pvecs = [jnp.zeros((a.shape[1], n_cls), jnp.float32) for a in acts]
+    for c in range(n_cls):
+        grads = grad_fn(zeros, c)
+        sel = (labels == c).astype(jnp.float32)[:, None]
+        for li, (a, g) in enumerate(zip(acts, grads)):
+            gp = _pool_tap(g) * (1.0 if g.ndim == 2 else g.shape[1] * g.shape[2])
+            if use_kernel:
+                from repro.kernels import ops as _kops
+                p_c = _kops.feature_stats(a * sel, gp)
+            else:
+                p_c = jnp.sum(a * sel * gp, axis=0)
+            pvecs[li] = pvecs[li].at[:, c].set(p_c.astype(jnp.float32))
+    return pvecs
+
+
+def total_variance(pvec):
+    """Eq. 17: TV of one layer's preference vectors (I, C)."""
+    mu = jnp.mean(pvec, axis=0, keepdims=True)
+    return jnp.mean(jnp.linalg.norm(pvec - mu, axis=1))
+
+
+def layer_total_variances(params, cfg, images, labels):
+    return [float(total_variance(p))
+            for p in class_preference_vectors(params, cfg, images, labels)]
+
+
+def primary_class(pvec):
+    """Argmax class per neuron — the 'feature encoding' color of Fig. 1/3."""
+    return jnp.argmax(pvec, axis=1)
+
+
+def feature_alignment_score(pvecs_per_node):
+    """Fraction of (node-pair, neuron) coordinates whose primary class agrees
+    — quantifies Fig. 1's qualitative alignment claim. Input: list over nodes
+    of (I, C) arrays for the SAME layer."""
+    tops = jnp.stack([primary_class(p) for p in pvecs_per_node])  # (N, I)
+    n = tops.shape[0]
+    agree, pairs = 0.0, 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            agree += float(jnp.mean((tops[i] == tops[j]).astype(jnp.float32)))
+            pairs += 1
+    return agree / max(pairs, 1)

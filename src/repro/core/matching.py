@@ -1,0 +1,134 @@
+"""Weight-level alignment (WLA) baseline + permutation-invariance utilities.
+
+Implements the paper's §2.4 comparison class: post-hoc neuron matching in the
+style of FedMA (Wang et al., ICLR'20), reduced to its one-shot core — per
+layer, Hungarian-match each client's neurons to a reference client by weight
+similarity (MSE), re-permute losslessly (Eq. 2-4), then average. This is the
+"heavy post-alignment" Fed2 makes unnecessary; it is also the tool used by
+property tests to verify permutation invariance of our CNNs.
+
+Defined for NON-grouped VGG-family CNNs (plans of "c" convs + FC stack) —
+matching a grouped model is Fed2's job, done structurally; the paper's FedMA
+comparison is on VGG9.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy.optimize import linear_sum_assignment
+
+from repro.models.cnn import CNNConfig, layer_meta
+
+
+def _copy(params):
+    return {"convs": [dict(l) for l in params["convs"]],
+            "fcs": [dict(l) for l in params["fcs"]]}
+
+
+def _neuron_matrix(layer, kind):
+    """Per-output-neuron flattened weight rows (I, fan_in[+1])."""
+    w = layer["w"]
+    rows = w.reshape(-1, w.shape[-1]).T if kind == "c" else w.T
+    if "b" in layer:
+        rows = jnp.concatenate([rows, layer["b"][:, None]], axis=1)
+    return rows
+
+
+def match_permutation(ref_rows, rows) -> np.ndarray:
+    """Hungarian assignment minimizing sum_i ||ref_i - rows[perm[i]]||^2.
+    Returns perm aligning ``rows`` to ``ref``."""
+    ref = np.asarray(ref_rows, np.float64)
+    cur = np.asarray(rows, np.float64)
+    cost = (np.sum(ref * ref, 1)[:, None] + np.sum(cur * cur, 1)[None, :]
+            - 2.0 * ref @ cur.T)
+    ri, ci = linear_sum_assignment(cost)
+    perm = np.empty(len(ci), dtype=np.int64)
+    perm[ri] = ci
+    return perm
+
+
+def permute_cnn_neurons(params, cfg: CNNConfig, layer_idx: int, perm):
+    """Losslessly permute the output neurons of weight-layer ``layer_idx``
+    and the next layer's matching input coordinates — Eq. 4's
+    (w_{l+1} Π)(Πᵀ w_l). Supports "c" convs and inner "fc" layers."""
+    metas = layer_meta(cfg)
+    n_convs = sum(1 for m in metas if m.kind in ("c", "dw"))
+    perm = jnp.asarray(perm)
+    params = _copy(params)
+    m = metas[layer_idx]
+    assert m.kind in ("c", "fc") and m.groups == 1, m
+
+    if m.kind == "c":
+        layer = dict(params["convs"][layer_idx])
+        layer["w"] = layer["w"][..., perm]
+        if "b" in layer:
+            layer["b"] = layer["b"][perm]
+        if "norm" in layer:
+            layer["norm"] = {k: v[perm] for k, v in layer["norm"].items()}
+        params["convs"][layer_idx] = layer
+        nxt = metas[layer_idx + 1]
+        if nxt.kind == "c":
+            nlayer = dict(params["convs"][layer_idx + 1])
+            nlayer["w"] = nlayer["w"][:, :, perm, :]
+            params["convs"][layer_idx + 1] = nlayer
+        elif nxt.kind == "dw":
+            nlayer = dict(params["convs"][layer_idx + 1])
+            nlayer["dw"] = {"w": nlayer["dw"]["w"][..., perm],
+                            "b": nlayer["dw"]["b"][perm]}
+            nlayer["w"] = {**nlayer["w"],
+                           "w": nlayer["w"]["w"][:, :, perm, :]}
+            params["convs"][layer_idx + 1] = nlayer
+        else:  # fc reading the flattened (H, W, C) features, C fastest
+            fc = dict(params["fcs"][0])
+            din, dout = fc["w"].shape
+            spatial = din // m.c_out
+            fc["w"] = fc["w"].reshape(spatial, m.c_out, dout)[:, perm, :] \
+                .reshape(din, dout)
+            params["fcs"][0] = fc
+    else:
+        fi = layer_idx - n_convs
+        fc = dict(params["fcs"][fi])
+        fc["w"] = fc["w"][:, perm]
+        if "b" in fc:
+            fc["b"] = fc["b"][perm]
+        params["fcs"][fi] = fc
+        nfc = dict(params["fcs"][fi + 1])
+        nfc["w"] = nfc["w"][perm, :]
+        params["fcs"][fi + 1] = nfc
+    return params
+
+
+def matchable_layers(cfg: CNNConfig):
+    metas = layer_meta(cfg)
+    return [i for i, m in enumerate(metas)
+            if m.kind in ("c", "fc") and m.groups == 1
+            and i < len(metas) - 1]
+
+
+def matched_average(stacked, cfg: CNNConfig, weights=None):
+    """One-shot FedMA-style matched averaging: align every client to client 0
+    layer-by-layer (shallow to deep), then FedAvg. stacked leaves: (N, ...)."""
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    clients = [jax.tree_util.tree_map(lambda a, i=i: a[i], stacked)
+               for i in range(n)]
+    metas = layer_meta(cfg)
+    n_convs = sum(1 for m in metas if m.kind in ("c", "dw"))
+    ref = clients[0]
+    aligned = [ref]
+    for c in clients[1:]:
+        cur = c
+        for li in matchable_layers(cfg):
+            m = metas[li]
+            if m.kind == "c":
+                ref_layer, cur_layer = ref["convs"][li], cur["convs"][li]
+            else:
+                ref_layer = ref["fcs"][li - n_convs]
+                cur_layer = cur["fcs"][li - n_convs]
+            perm = match_permutation(_neuron_matrix(ref_layer, m.kind),
+                                     _neuron_matrix(cur_layer, m.kind))
+            cur = permute_cnn_neurons(cur, cfg, li, perm)
+        aligned.append(cur)
+    restacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *aligned)
+    from repro.core.fusion import fedavg
+    return fedavg(restacked, weights)

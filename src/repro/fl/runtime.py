@@ -1,0 +1,201 @@
+"""Federated learning runtime.
+
+Clients execute SIMULTANEOUSLY as a vmapped batch over stacked params —
+the single-host analog of the mesh execution in launch/train.py where the
+client axis is sharded over the mesh "data" axis (DESIGN.md §5). A round is:
+
+    stacked <- broadcast(global)            # round start
+    stacked <- vmap(local_sgd)(stacked, client_batches)
+    global  <- fuse(stacked)                # fedavg | fed2 paired | fedma
+
+Fusion methods:
+  fedavg   coordinate-based mean (Eq. 1), sample-weighted
+  fedprox  fedavg + proximal local loss (mu/2 ||w - w_g||^2)
+  fed2     feature paired averaging (Eq. 19) over the group-axis tree
+  fedma    one-shot matched averaging (WLA baseline, core/matching.py)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fusion as fusion_lib
+from repro.core import matching as matching_lib
+from repro.optim.optimizers import Optimizer, sgd
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    n_nodes: int = 10
+    rounds: int = 20
+    local_epochs: int = 1
+    steps_per_epoch: int = 10
+    batch_size: int = 32
+    lr: float = 0.05
+    momentum: float = 0.9
+    method: str = "fed2"        # fedavg | fedprox | fed2 | fedma
+    prox_mu: float = 0.01
+    seed: int = 0
+    eval_batch: int = 512
+
+
+@dataclasses.dataclass
+class FLTask:
+    """Model-family adapter consumed by ``run_federated``."""
+    init_fn: Callable[[jax.Array], PyTree]
+    loss_fn: Callable[[PyTree, dict], jnp.ndarray]
+    eval_fn: Callable[[PyTree, dict], jnp.ndarray]   # -> accuracy
+    group_axes_fn: Callable[[PyTree], PyTree] | None = None  # fed2
+    matched_average_fn: Callable | None = None               # fedma
+
+
+def _make_local_update(task: FLTask, cfg: FLConfig, opt: Optimizer):
+    """jit-compiled: one client's full local phase (scan over steps),
+    vmapped over the stacked client axis."""
+
+    def local_loss(params, batch, global_params):
+        loss = task.loss_fn(params, batch)
+        if cfg.method == "fedprox":
+            loss = loss + fusion_lib.fedprox_penalty(params, global_params,
+                                                     cfg.prox_mu)
+        return loss
+
+    def one_client(params, batches, global_params):
+        state = opt.init(params)
+
+        def step(carry, batch):
+            p, s, i = carry
+            g = jax.grad(local_loss)(p, batch, global_params)
+            p, s = opt.update(g, s, p, i)
+            return (p, s, i + 1), None
+
+        (params, _, _), _ = jax.lax.scan(
+            step, (params, state, jnp.zeros((), jnp.int32)), batches)
+        return params
+
+    @jax.jit
+    def all_clients(stacked_params, stacked_batches, global_params):
+        return jax.vmap(one_client, in_axes=(0, 0, None))(
+            stacked_params, stacked_batches, global_params)
+
+    return all_clients
+
+
+def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
+    """Per round: (N, n_steps, B, ...) batch arrays, sampling with
+    replacement where a client's shard is short."""
+    per_client = []
+    for idx in parts:
+        steps = []
+        for _ in range(n_steps):
+            if len(idx) == 0:
+                sel = np.zeros((batch_size,), np.int64)
+            else:
+                sel = rng.choice(idx, size=batch_size,
+                                 replace=len(idx) < batch_size)
+            steps.append(get_batch(sel))
+        per_client.append(jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *steps))
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_client)
+
+
+def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
+                  test_batches, *, log=None,
+                  class_counts=None, group_spec=None) -> dict:
+    """parts: list of per-client index arrays; get_batch(sel)->batch dict;
+    test_batches: list of batch dicts for global eval.
+
+    class_counts (N, C) + group_spec enable Eq. 19's non-IID refinement for
+    fed2: group g fuses only across nodes that hold g's classes
+    (presence-weighted paired averaging).
+
+    Returns history {round, acc, loss, wall}."""
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    global_params = task.init_fn(key)
+    opt = sgd(cfg.lr, cfg.momentum)
+    local_update = _make_local_update(task, cfg, opt)
+    weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
+
+    eval_fn = jax.jit(task.eval_fn)
+    history = {"round": [], "acc": [], "wall": []}
+    n_steps = cfg.local_epochs * cfg.steps_per_epoch
+    t0 = time.time()
+    for r in range(cfg.rounds):
+        stacked = fusion_lib.broadcast_global(global_params, cfg.n_nodes)
+        batches = _pack_client_batches(parts, get_batch, n_steps,
+                                       cfg.batch_size, rng)
+        stacked = local_update(stacked, batches, global_params)
+        if cfg.method == "fed2":
+            ga = task.group_axes_fn(global_params)
+            gw = None
+            if class_counts is not None and group_spec is not None:
+                gw = fusion_lib.presence_group_weights(class_counts,
+                                                       group_spec)
+            global_params = fusion_lib.paired_average(stacked, ga,
+                                                      weights=weights,
+                                                      group_weights=gw)
+        elif cfg.method == "fedma":
+            global_params = task.matched_average_fn(stacked, weights)
+        else:
+            global_params = fusion_lib.fedavg(stacked, weights)
+        acc = float(np.mean([float(eval_fn(global_params, tb))
+                             for tb in test_batches]))
+        history["round"].append(r)
+        history["acc"].append(acc)
+        history["wall"].append(time.time() - t0)
+        if log:
+            log(f"round {r:3d} acc {acc:.4f}")
+    history["final_params"] = global_params
+    return history
+
+
+# ---------------------------------------------------------------------------
+# Task builders
+# ---------------------------------------------------------------------------
+
+
+def cnn_task(model_cfg) -> FLTask:
+    from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+
+    return FLTask(
+        init_fn=lambda k: init_cnn(k, model_cfg),
+        loss_fn=lambda p, b: cnn_loss(p, model_cfg, b),
+        eval_fn=lambda p, b: cnn_accuracy(p, model_cfg, b),
+        group_axes_fn=lambda p: fusion_lib.cnn_group_axes(p, model_cfg),
+        matched_average_fn=lambda s, w: matching_lib.matched_average(
+            s, model_cfg, w),
+    )
+
+
+def lm_task(model_cfg) -> FLTask:
+    from repro.models.forward import lm_loss
+
+    def accuracy(params, batch):
+        # next-token top-1 accuracy as the LM "accuracy" analog
+        from repro.models.forward import forward
+        from repro.models.transformer import unembed_apply
+        h, _ = forward(params, model_cfg, batch["tokens"])
+        table = params["embed"]["table"] if model_cfg.tie_embeddings else None
+        logits = unembed_apply(params.get("unembed"), h, model_cfg, table)
+        pred = jnp.argmax(logits, -1)
+        m = batch["mask"]
+        return jnp.sum((pred == batch["labels"]) * m) / jnp.maximum(
+            jnp.sum(m), 1)
+
+    from repro.models.transformer import init_params
+    return FLTask(
+        init_fn=lambda k: init_params(k, model_cfg),
+        loss_fn=lambda p, b: lm_loss(p, model_cfg, b),
+        eval_fn=accuracy,
+        group_axes_fn=lambda p: fusion_lib.lm_group_axes(p, model_cfg),
+        matched_average_fn=None,
+    )

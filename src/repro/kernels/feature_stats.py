@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: fused activation x gradient class-preference reduction.
+
+Eq. 9 hot loop: p[i] = sum_b A[b, i] * G[b, i]. Run once per class per
+fusion round over every tapped layer — a bandwidth-bound fused
+multiply-reduce. One HBM pass over A and G instead of (multiply -> temp ->
+reduce) materializing a (B, I) product.
+
+Tiling: grid (I/bi, B/bb); fp32 VMEM accumulator row (1, bi); bi=512 lanes,
+bb=256 rows -> 2 x 512 KiB input tiles in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fs_kernel(a_ref, g_ref, o_ref, acc_ref, *, nb: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    prod = a_ref[...].astype(jnp.float32) * g_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.sum(prod, axis=0, keepdims=True)
+
+    @pl.when(pl.program_id(1) == nb - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bb", "interpret"))
+def feature_stats_kernel(a, g, *, bi: int = 512, bb: int = 256,
+                         interpret: bool = True):
+    """a, g: (B, I) -> (1, I) = sum_b a*g. Pre-padded to tile multiples."""
+    b, i = a.shape
+    assert a.shape == g.shape
+    assert b % bb == 0 and i % bi == 0, (a.shape, bb, bi)
+    nb = b // bb
+    grid = (i // bi, nb)
+    return pl.pallas_call(
+        functools.partial(_fs_kernel, nb=nb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bi), lambda ii, bj: (bj, ii)),
+            pl.BlockSpec((bb, bi), lambda ii, bj: (bj, ii)),
+        ],
+        out_specs=pl.BlockSpec((1, bi), lambda ii, bj: (0, ii)),
+        out_shape=jax.ShapeDtypeStruct((1, i), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bi), jnp.float32)],
+        interpret=interpret,
+    )(a, g)

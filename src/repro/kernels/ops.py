@@ -1,0 +1,109 @@
+"""jit'd public wrappers around the Pallas kernels: padding, layout, bias,
+and group-pairing gathers. ``interpret`` defaults to True (CPU validation);
+on real TPU set REPRO_PALLAS_COMPILE=1.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.feature_stats import feature_stats_kernel
+from repro.kernels.grouped_matmul import grouped_matmul_kernel
+from repro.kernels.paired_fusion import paired_fusion_kernel
+from repro.kernels.ssd_update import ssd_update_kernel
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg), size
+
+
+def grouped_matmul(x, w, b=None, *, bm: int = 128, bn: int = 128,
+                   bk: int = 128):
+    """Block-diagonal matmul. x: (..., G*K); w: (G, K, N); b: (G, N)."""
+    g, k, n = w.shape
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    m0 = xm.shape[0]
+    # pad M
+    xm, _ = _pad_to(xm, bm, 0)
+    # pad K: pad each group column panel -> reshape (M, G, K) pad K
+    kp = (-k) % bk
+    np_ = (-n) % bn
+    if kp:
+        xg = xm.reshape(xm.shape[0], g, k)
+        xg = jnp.pad(xg, ((0, 0), (0, 0), (0, kp)))
+        xm = xg.reshape(xm.shape[0], g * (k + kp))
+        w = jnp.pad(w, ((0, 0), (0, kp), (0, 0)))
+    if np_:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, np_)))
+    y = grouped_matmul_kernel(xm, w, bm=bm, bn=bn, bk=bk,
+                              interpret=_INTERPRET)
+    y = y.reshape(y.shape[0], g, n + np_)[:m0, :, :n]
+    if b is not None:
+        y = y + b
+    return y.reshape(lead + (g * n,))
+
+
+def feature_stats(a, grad, *, bi: int = 512, bb: int = 256):
+    """Fused per-neuron sum_b A*G. a, grad: (B, I) -> (I,) fp32."""
+    a, i0 = _pad_to(a, bi, 1)
+    grad, _ = _pad_to(grad, bi, 1)
+    a, _ = _pad_to(a, bb, 0)
+    grad, _ = _pad_to(grad, bb, 0)
+    out = feature_stats_kernel(a, grad, bi=bi, bb=bb, interpret=_INTERPRET)
+    return out[0, :i0]
+
+
+def ssd_update(h, x, dt, a_log, b, c, d_skip, *, bh: int = 8):
+    """Fused SSD decode step. Pads H to a multiple of bh."""
+    bs, hh, p, n = h.shape
+    bh = min(bh, hh)
+    pad = (-hh) % bh
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        a_log = jnp.pad(a_log, (0, pad))
+        d_skip = jnp.pad(d_skip, (0, pad))
+    hn, y = ssd_update_kernel(h, x, dt, a_log, b, c, d_skip, bh=bh,
+                              interpret=_INTERPRET)
+    return hn[:, :hh], y[:, :hh]
+
+
+def paired_fusion(stacked, weights, *, group_axis=None, perms=None,
+                  bm: int = 1024):
+    """Fused weighted client averaging of ONE stacked leaf (N, ...).
+    Optional Fed2 pairing: reorder each client's group blocks (group_axis =
+    (axis, n_groups) in the per-client view) by ``perms`` (N, G) before the
+    reduction."""
+    n = stacked.shape[0]
+    x = stacked
+    if perms is not None and group_axis is not None:
+        ax, g = group_axis
+        ax = ax + 1  # account for the client axis
+        size = x.shape[ax]
+        blk = size // g
+        shp = x.shape[:ax] + (g, blk) + x.shape[ax + 1:]
+        xr = x.reshape(shp)
+        xr = jax.vmap(lambda one, p: jnp.take(one, p, axis=ax - 1))(
+            xr, jnp.asarray(perms))
+        x = xr.reshape(x.shape)
+    flat = x.reshape(n, -1)
+    m0 = flat.shape[1]
+    flat, _ = _pad_to(flat, bm, 1)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    out = paired_fusion_kernel(flat, w, bm=bm, interpret=_INTERPRET)
+    return out[0, :m0].reshape(stacked.shape[1:])

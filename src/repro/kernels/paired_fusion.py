@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: fused N-way weighted parameter averaging.
+
+The fusion step (Eq. 18/19) is memory-bound: read N stacked client tensors
+once, write the global tensor once. A naive stack-multiply-mean materializes
+an (N, M) fp32 temp; this kernel streams client rows through VMEM and
+accumulates in fp32. Group pairing permutations are applied as a cheap
+index-gather in ops.py before the kernel (identity under Fed2's structural
+pre-alignment) — the heavy reduction is what needs fusing.
+
+Tiling: grid (M/bm, N); weight scalars ride a (N,1) SMEM-friendly block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pf_kernel(x_ref, w_ref, o_ref, acc_ref, *, n: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += w_ref[0, 0] * x_ref[0].astype(jnp.float32)
+
+    @pl.when(pl.program_id(1) == n - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def paired_fusion_kernel(stacked, weights, *, bm: int = 1024,
+                         interpret: bool = True):
+    """stacked: (N, M); weights: (N,) normalized -> (1, M) weighted mean.
+    M pre-padded to a multiple of bm."""
+    n, m = stacked.shape
+    assert m % bm == 0, (m, bm)
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+    grid = (m // bm, n)
+    return pl.pallas_call(
+        functools.partial(_pf_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda mi, ni: (ni, mi)),
+            pl.BlockSpec((1, 1), lambda mi, ni: (ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda mi, ni: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((1, m), stacked.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bm), jnp.float32)],
+        interpret=interpret,
+    )(stacked, w2)

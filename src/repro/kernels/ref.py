@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x, w, b=None):
+    """x: (..., G*K); w: (G, K, N); b: (G, N) -> (..., G*N)."""
+    g, k, n = w.shape
+    xg = x.reshape(x.shape[:-1] + (g, k))
+    y = jnp.einsum("...gk,gkn->...gn", xg, w)
+    if b is not None:
+        y = y + b
+    return y.reshape(x.shape[:-1] + (g * n,))
+
+
+def feature_stats_ref(a, g):
+    """a, g: (B, I) -> (I,) = sum_b a * g (fp32)."""
+    return jnp.sum(a.astype(jnp.float32) * g.astype(jnp.float32), axis=0)
+
+
+def ssd_update_ref(h, x, dt, a_log, b, c, d_skip):
+    """Fused SSD decode step oracle (mirrors models/ssm.ssd_step).
+    h: (B,H,P,N); x: (B,H,P); dt: (B,H); b,c: (B,N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * a)          # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32),
+                     b.astype(jnp.float32), x.astype(jnp.float32))
+    hnew = decay[..., None, None] * h.astype(jnp.float32) + upd
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), hnew)
+    y = y + d_skip[None, :, None] * x.astype(jnp.float32)
+    return hnew.astype(h.dtype), y.astype(x.dtype)
+
+
+def paired_fusion_ref(stacked, weights):
+    """stacked: (N, M); weights: (N,) -> (M,) = sum_n w_n x_n (fp32 acc)."""
+    w = weights.astype(jnp.float32)[:, None]
+    return jnp.sum(stacked.astype(jnp.float32) * w, axis=0).astype(
+        stacked.dtype)

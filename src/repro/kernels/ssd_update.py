@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused SSD single-token state update + readout.
+
+Roofline (EXPERIMENTS.md) shows SSM decode is MEMORY-dominant: the state
+(B, H, P, N) is the stream. Unfused, XLA reads the state for the update,
+writes it, and reads it again for the readout (3 HBM passes) plus an
+(B,H,P,N) outer-product temp. This kernel does
+
+    h' = exp(dt * A) * h + dt * (B outer x);   y = (h' @ C) + D * x
+
+in ONE pass over the state: read h tile, write h' tile, accumulate y tile
+in VMEM. ~2 HBM passes, no materialized outer product.
+
+Tiling: grid (B, H/bh); per-step working set bh*(P*N) fp32 state tile
+(default 8*64*128*4 = 256 KiB) + small vectors.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(h_ref, x_ref, dt_ref, alog_ref, b_ref, c_ref, d_ref,
+                hout_ref, y_ref):
+    h = h_ref[0].astype(jnp.float32)          # (bh, P, N)
+    x = x_ref[0].astype(jnp.float32)          # (bh, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (bh,)
+    a = -jnp.exp(alog_ref[...].astype(jnp.float32))  # (bh,)
+    bvec = b_ref[0].astype(jnp.float32)       # (N,)
+    cvec = c_ref[0].astype(jnp.float32)       # (N,)
+    dskip = d_ref[...].astype(jnp.float32)    # (bh,)
+    decay = jnp.exp(dt * a)                   # (bh,)
+    upd = (dt[:, None] * x)[:, :, None] * bvec[None, None, :]
+    hnew = decay[:, None, None] * h + upd     # (bh, P, N)
+    y = jnp.einsum("hpn,n->hp", hnew, cvec) + dskip[:, None] * x
+    hout_ref[0] = hnew.astype(hout_ref.dtype)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def ssd_update_kernel(h, x, dt, a_log, b, c, d_skip, *, bh: int = 8,
+                      interpret: bool = True):
+    """h: (B,H,P,N) fp32; x: (B,H,P); dt: (B,H); a_log,d_skip: (H,);
+    b,c: (B,N). Returns (h', y) with y: (B,H,P). H % bh == 0."""
+    bs, hh, p, n = h.shape
+    assert hh % bh == 0, (hh, bh)
+    grid = (bs, hh // bh)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bh, p, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bh, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bh, p, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bh, p), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(h.shape, h.dtype),
+            jax.ShapeDtypeStruct((bs, hh, p), x.dtype),
+        ],
+        interpret=interpret,
+    )(h, x, dt, a_log, b, c, d_skip)

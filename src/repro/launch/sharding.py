@@ -1,0 +1,228 @@
+"""GSPMD sharding rules for every model family on the production mesh.
+
+Scheme (Megatron-style tensor parallel on axis "model", batch on
+("pod","data")):
+  - column-parallel (shard OUT dim):  wq wk wv wq_a wq_b wkv_a wk_b wv_b
+                                      w_z w_xbc w_gate w_up  (+ their biases)
+  - row-parallel (shard IN dim):      wo w_down out_proj     (bias replicated)
+  - embeddings: vocab-sharded; unembedding: vocab (last dim) sharded
+  - MoE experts: expert-parallel on "model" when E % |model| == 0
+    (deepseek-v2: 160/16), else per-expert tensor-parallel on d_ff (mixtral)
+  - SSM: w_z/w_xbc column-parallel, out_proj row-parallel, depthwise conv +
+    states sharded on the channel/head axis
+  - norms / scalar per-head params: replicated
+  - decode caches: KV head-dim (always a multiple of 16 across the assigned
+    archs) on "model"; MLA latent dim on "model"; batch on "data" when
+    divisible (long_500k B=1 stays replicated on data).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+COL = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b",
+       "w_z", "w_xbc", "w_gate", "w_up"}
+ROW = {"wo", "w_down", "out_proj"}
+
+
+def _names(path):
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return out
+
+
+def _param_pspec(names, leaf, cfg, msize) -> P:
+    last = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    nd = len(leaf.shape)
+
+    if last == "table":
+        if "embed" in names:
+            return P("model", None)        # vocab-sharded embedding
+        return P()                          # positional tables: replicate
+    if "unembed" in names:
+        if nd == 2:
+            return P(None, "model")
+        return P(None, None, "model")       # grouped: (G, d/G, V/G)
+
+    # MoE stacked expert tensors: leaves named w_gate/w_up/w_down directly
+    if last in ("w_gate", "w_up", "w_down") and nd >= 3 \
+            and "shared" not in names:
+        e = leaf.shape[-3]
+        expert_parallel = (e % msize == 0)
+        if expert_parallel:
+            spec = [None] * nd
+            spec[-3] = "model"
+            return P(*spec)
+        if last == "w_down":                # (L, E, f, d): shard f
+            spec = [None] * nd
+            spec[-2] = "model"
+            return P(*spec)
+        spec = [None] * nd                  # (L, E, d, f): shard f
+        spec[-1] = "model"
+        return P(*spec)
+
+    if parent in COL or (parent == "shared" and last in ("w_gate", "w_up")):
+        if last == "w":
+            return P(*([None] * (nd - 1) + ["model"]))
+        if last == "b":
+            return P(*([None] * (nd - 1) + ["model"]))
+    if parent in ROW or (parent == "shared" and last == "w_down"):
+        if last == "w":
+            return P(*([None] * (nd - 2) + ["model", None]))
+        return P()                          # row-parallel bias: replicate
+    # grouped_dense stacked leaves: path ...['w_gate']['w'] handled above via
+    # parent in COL/ROW; conv depthwise: channel axis last
+    if parent == "conv":
+        if last == "w":
+            return P(*([None] * (nd - 1) + ["model"]))
+        return P(*([None] * (nd - 1) + ["model"]))
+    return P()                              # norms, a_log, dt_bias, ...
+
+
+def param_shardings(param_shapes, cfg, mesh):
+    """pytree of NamedSharding matching eval_shape(init_params) output."""
+    msize = mesh.shape["model"]
+
+    def rule(path, leaf):
+        return NamedSharding(mesh, _param_pspec(_names(path), leaf, cfg,
+                                                msize))
+
+    return jax.tree_util.tree_map_with_path(rule, param_shapes)
+
+
+def zero1_shardings(param_shapes, cfg, mesh):
+    """ZeRO-1 sharding for optimizer state / grad accumulators: the param
+    sharding PLUS the first still-replicated, divisible axis sharded over
+    "data" (and "pod" when present). GSPMD then reduce-scatters grads and
+    all-gathers updated params — the standard ZeRO schedule, derived purely
+    from shardings."""
+    msize = mesh.shape["model"]
+    extra = [a for a in ("data", "pod") if a in mesh.axis_names]
+    dsize = int(np.prod([mesh.shape[a] for a in extra]))
+
+    def rule(path, leaf):
+        spec = list(_param_pspec(_names(path), leaf, cfg, msize))
+        spec = spec + [None] * (len(leaf.shape) - len(spec))
+        for i, (s, dim) in enumerate(zip(spec, leaf.shape)):
+            if s is None and dim % dsize == 0 and dim >= dsize:
+                spec[i] = tuple(extra) if len(extra) > 1 else extra[0]
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, param_shapes)
+
+
+def like_params(shard_tree):
+    return shard_tree
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def _bspec(mesh, batch: int):
+    ba = batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in ba]))
+    return ba if batch % nb == 0 else None
+
+
+def batch_specs(cfg, shape, mesh):
+    """ShapeDtypeStructs (with shardings) for a train/prefill batch."""
+    import jax.numpy as jnp
+    b, s = shape.global_batch, shape.seq_len
+    ba = _bspec(mesh, b)
+    tok = jax.ShapeDtypeStruct(
+        (b, s), jnp.int32, sharding=NamedSharding(mesh, P(ba, None)))
+    out = {"tokens": tok, "labels": tok,
+           "mask": jax.ShapeDtypeStruct(
+               (b, s), jnp.float32,
+               sharding=NamedSharding(mesh, P(ba, None)))}
+    if cfg.family == "encdec":
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_frames, cfg.d_model), cfg.dtype,
+            sharding=NamedSharding(mesh, P(ba, None, None)))
+    if cfg.family == "vlm":
+        # text tokens shortened so patches + text = seq_len
+        t = jax.ShapeDtypeStruct(
+            (b, s - cfg.n_patches), jnp.int32,
+            sharding=NamedSharding(mesh, P(ba, None)))
+        out["tokens"] = t
+        out["labels"] = t
+        out["mask"] = jax.ShapeDtypeStruct(
+            (b, s - cfg.n_patches), jnp.float32,
+            sharding=NamedSharding(mesh, P(ba, None)))
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), cfg.dtype,
+            sharding=NamedSharding(mesh, P(ba, None, None)))
+    return out
+
+
+def _cache_pspec(names, leaf, mesh, ba):
+    nd = len(leaf.shape)
+    last = names[-1]
+    if last == "slot_pos":
+        return P()
+    if last in ("k", "v"):          # (L, B, S, kv, hd) or (L?, B, S, kv, hd)
+        spec = [None] * nd
+        spec[-4] = ba
+        spec[-1] = "model"          # head_dim: always divisible by 16
+        return P(*spec)
+    if last == "c_kv":              # (L, B, S, kv_lora)
+        spec = [None] * nd
+        spec[-3] = ba
+        spec[-1] = "model"
+        return P(*spec)
+    if last == "k_rope":            # (L, B, S, 64)
+        spec = [None] * nd
+        spec[-3] = ba
+        return P(*spec)
+    if last == "conv":              # (L, B, K-1, conv_dim)
+        spec = [None] * nd
+        spec[-3] = ba
+        spec[-1] = "model"
+        return P(*spec)
+    if last == "ssm":               # (L, B, H, P, N)
+        spec = [None] * nd
+        spec[-4] = ba
+        spec[-3] = "model"
+        return P(*spec)
+    return P()
+
+
+def cache_specs(cfg, shape, mesh):
+    """ShapeDtypeStructs for the decode cache of (cfg, shape)."""
+    from repro.models.forward import init_cache
+    b, s = shape.global_batch, shape.seq_len
+    ba = _bspec(mesh, b)
+    shapes = jax.eval_shape(lambda: init_cache(cfg, b, s))
+
+    def rule(path, leaf):
+        ps = _cache_pspec(_names(path), leaf, mesh, ba)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, ps))
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def decode_token_specs(cfg, shape, mesh):
+    import jax.numpy as jnp
+    b = shape.global_batch
+    ba = _bspec(mesh, b)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32,
+                               sharding=NamedSharding(mesh, P(ba, None)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return tok, pos

@@ -1,0 +1,135 @@
+"""Training launcher.
+
+Two modes:
+  --mode lm    : language-model pretraining on the synthetic token corpus
+                 for any assigned arch (reduced or full), on the host mesh
+                 or a real TPU mesh.
+  --mode fl    : the paper's federated scenario (CNN + Fed2/fedavg/...).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --mode lm \
+      --arch llama3.2-1b --reduced --steps 50 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --mode fl \
+      --arch vgg9 --method fed2 --rounds 10 --nodes 6 --classes-per-node 5
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run_lm(args):
+    from repro.checkpoint.io import save_checkpoint
+    from repro.configs import get_config
+    from repro.configs.common import with_fed2
+    from repro.data.synthetic import lm_batch_from_tokens, make_token_dataset
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import make_train_step
+    from repro.models.transformer import init_params
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if args.fed2:
+        cfg = with_fed2(cfg, groups=args.fed2_groups)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    step_fn, opt = make_train_step(cfg, lr=args.lr,
+                                   microbatches=args.microbatches)
+    ostate = opt.init(params)
+    step_jit = jax.jit(step_fn)
+
+    toks, _ = make_token_dataset(args.batch * args.steps, args.seq + 1,
+                                 cfg.vocab, seed=args.seed)
+    mesh = make_host_mesh()
+    t0 = time.time()
+    with mesh:
+        for i in range(args.steps):
+            sl = toks[i * args.batch:(i + 1) * args.batch]
+            batch = lm_batch_from_tokens(sl)
+            params, ostate, loss = step_jit(params, ostate, jnp.int32(i),
+                                            batch)
+            if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss {float(loss):.4f} "
+                      f"({time.time() - t0:.1f}s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=args.steps)
+        print("checkpoint ->", args.ckpt)
+    return float(loss)
+
+
+def run_fl(args):
+    import importlib
+
+    from repro.data.synthetic import (dirichlet_partition,
+                                      make_image_dataset, nxc_partition)
+    from repro.fl.runtime import FLConfig, cnn_task, run_federated
+
+    mod = importlib.import_module(
+        f"repro.configs.{args.arch.replace('-', '_').replace('.', '_')}")
+    if args.method == "fed2":
+        cfg = (mod.reduced() if args.reduced else
+               mod.full(fed2_groups=args.fed2_groups))
+    else:
+        cfg = (mod.reduced(fed2_groups=0, norm="none") if args.reduced
+               else mod.baseline())
+    ds = make_image_dataset(args.train_size, n_classes=cfg.n_classes,
+                            seed=args.seed, noise=args.noise)
+    test = make_image_dataset(args.train_size // 4,
+                              n_classes=cfg.n_classes, seed=args.seed + 99,
+                              noise=args.noise)
+    if args.dirichlet > 0:
+        parts = dirichlet_partition(ds.labels, args.nodes, args.dirichlet,
+                                    cfg.n_classes, seed=args.seed)
+    else:
+        parts = nxc_partition(ds.labels, args.nodes, args.classes_per_node,
+                              cfg.n_classes, seed=args.seed)
+
+    def get_batch(sel):
+        return {"images": jnp.asarray(ds.images[sel]),
+                "labels": jnp.asarray(ds.labels[sel])}
+
+    test_batches = [{"images": jnp.asarray(test.images),
+                     "labels": jnp.asarray(test.labels)}]
+    fl = FLConfig(n_nodes=args.nodes, rounds=args.rounds,
+                  local_epochs=args.local_epochs,
+                  steps_per_epoch=args.steps_per_epoch,
+                  batch_size=args.batch, lr=args.lr, momentum=0.9,
+                  method=args.method, seed=args.seed)
+    h = run_federated(cnn_task(cfg), fl, parts, get_batch, test_batches,
+                      log=print)
+    print("final acc:", h["acc"][-1])
+    return h
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "fl"], default="fl")
+    ap.add_argument("--arch", default="vgg9")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--fed2", action="store_true")
+    ap.add_argument("--fed2-groups", type=int, default=8)
+    ap.add_argument("--method", default="fed2",
+                    choices=["fedavg", "fedprox", "fed2", "fedma"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--nodes", type=int, default=10)
+    ap.add_argument("--classes-per-node", type=int, default=5)
+    ap.add_argument("--dirichlet", type=float, default=0.0)
+    ap.add_argument("--local-epochs", type=int, default=1)
+    ap.add_argument("--steps-per-epoch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--train-size", type=int, default=4000)
+    ap.add_argument("--noise", type=float, default=1.2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+    (run_lm if args.mode == "lm" else run_fl)(args)
+
+
+if __name__ == "__main__":
+    main()

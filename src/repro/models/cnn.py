@@ -1,0 +1,215 @@
+"""Paper-faithful CNN classifiers: VGG9 (FedMA variant), VGG16, MobileNetV1.
+
+Fed2 structure adaptation (§5.1): with ``fed2_groups = G > 0`` the last
+``decouple`` weight layers become group convolutions / block-diagonal FCs,
+with the logit layer decoupled so class-cluster g connects only to structure
+group g (gradient redirection, Eq. 16). All channel widths are rounded up to
+multiples of G (the paper's "structure adaptation").
+Normalization: none | bn (batch stats) | gn (GroupNorm, per Fed2 §5.1).
+
+Static layer topology lives in ``layer_meta(cfg)`` — params are pure array
+pytrees so FedAvg/Fed2 fusion and optimizers can tree_map over them.
+
+Inputs are NHWC (B, 32, 32, 3) CIFAR-like images.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (batchnorm_apply, batchnorm_init,
+                                 conv2d_apply, conv2d_init, dense_apply,
+                                 dense_init, grouped_dense_apply,
+                                 grouped_dense_init, groupnorm_apply,
+                                 groupnorm_init)
+
+# conv plans: ("c", out) 3x3 conv, ("p",) 2x2 maxpool, ("dw", out, stride)
+VGG9_PLAN = (("c", 32), ("c", 64), ("p",), ("c", 128), ("c", 128), ("p",),
+             ("c", 256), ("c", 256), ("p",))
+VGG16_PLAN = (("c", 64), ("c", 64), ("p",),
+              ("c", 128), ("c", 128), ("p",),
+              ("c", 256), ("c", 256), ("c", 256), ("p",),
+              ("c", 512), ("c", 512), ("c", 512), ("p",),
+              ("c", 512), ("c", 512), ("c", 512), ("p",))
+MOBILENET_PLAN = (("c", 32),
+                  ("dw", 64, 1), ("dw", 128, 2), ("dw", 128, 1),
+                  ("dw", 256, 2), ("dw", 256, 1), ("dw", 512, 2),
+                  ("dw", 512, 1), ("dw", 512, 1), ("dw", 512, 1),
+                  ("dw", 512, 1), ("dw", 512, 1), ("dw", 1024, 2),
+                  ("dw", 1024, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    arch_id: str
+    plan: tuple = VGG9_PLAN
+    fc_dims: tuple = (512, 512)
+    n_classes: int = 10
+    norm: str = "none"            # none | bn | gn
+    fed2_groups: int = 0
+    decouple: int = 6             # trailing weight layers grouped
+    input_hw: int = 32
+    gn_groups: int = 8
+    dtype: object = jnp.float32
+
+    def round_ch(self, c: int) -> int:
+        g = self.fed2_groups
+        return c if g == 0 else -(-c // g) * g
+
+    @property
+    def n_weight_layers(self) -> int:
+        convs = sum(1 for s in self.plan if s[0] != "p")
+        return convs + len(self.fc_dims) + 1  # + logit layer
+
+    def layer_grouped(self, widx: int) -> bool:
+        if self.fed2_groups == 0:
+            return False
+        return widx >= self.n_weight_layers - self.decouple
+
+    @property
+    def is_mobilenet(self) -> bool:
+        return "mobilenet" in self.arch_id or "mbnet" in self.arch_id
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMeta:
+    kind: str          # "c" | "dw" | "fc" | "logits"
+    groups: int        # feature_group_count / block count (1 = dense)
+    stride: int = 1
+    c_in: int = 0
+    c_out: int = 0
+    grouped_fc: bool = False
+
+
+def layer_meta(cfg: CNNConfig) -> list[LayerMeta]:
+    """Static per-weight-layer topology (convs, then FCs, then logits)."""
+    metas: list[LayerMeta] = []
+    c_in, widx, hw = 3, 0, cfg.input_hw
+    g = max(cfg.fed2_groups, 1)
+    for step in cfg.plan:
+        if step[0] == "p":
+            hw //= 2
+            continue
+        c_out = cfg.round_ch(step[1])
+        grouped = cfg.layer_grouped(widx) and c_in % g == 0 and g > 1
+        stride = step[2] if step[0] == "dw" else 1
+        metas.append(LayerMeta(step[0], g if grouped else 1, stride,
+                               c_in, c_out))
+        if step[0] == "dw" and stride > 1:
+            hw = -(-hw // stride)
+        c_in, widx = c_out, widx + 1
+    d_in = c_in if cfg.is_mobilenet else hw * hw * c_in
+    for d in cfg.fc_dims:
+        d_out = cfg.round_ch(d)
+        grouped = cfg.layer_grouped(widx) and d_in % g == 0 and g > 1
+        metas.append(LayerMeta("fc", g if grouped else 1, 1, d_in, d_out,
+                               grouped_fc=grouped))
+        d_in, widx = d_out, widx + 1
+    n_cls = cfg.round_ch(cfg.n_classes)
+    grouped = cfg.layer_grouped(widx) and d_in % g == 0 and g > 1
+    metas.append(LayerMeta("logits", g if grouped else 1, 1, d_in, n_cls,
+                           grouped_fc=grouped))
+    return metas
+
+
+def init_cnn(key, cfg: CNNConfig):
+    metas = layer_meta(cfg)
+    keys = jax.random.split(key, len(metas))
+    convs, fcs = [], []
+    for m, k in zip(metas, keys):
+        if m.kind in ("c", "dw"):
+            layer = {}
+            if m.kind == "dw":
+                k1, k2 = jax.random.split(k)
+                layer["dw"] = conv2d_init(k1, m.c_in, m.c_in, 3,
+                                          groups=m.c_in, dtype=cfg.dtype)
+                layer["w"] = conv2d_init(k2, m.c_in, m.c_out, 1,
+                                         groups=m.groups, dtype=cfg.dtype)
+            else:
+                layer.update(conv2d_init(k, m.c_in, m.c_out, 3,
+                                         groups=m.groups, dtype=cfg.dtype))
+            if cfg.norm == "bn":
+                layer["norm"] = batchnorm_init(m.c_out, cfg.dtype)
+            elif cfg.norm == "gn":
+                layer["norm"] = groupnorm_init(m.c_out, cfg.dtype)
+            convs.append(layer)
+        else:
+            if m.grouped_fc:
+                fcs.append(grouped_dense_init(k, m.groups, m.c_in, m.c_out,
+                                              bias=True, dtype=cfg.dtype))
+            else:
+                fcs.append(dense_init(k, m.c_in, m.c_out, bias=True,
+                                      dtype=cfg.dtype))
+    return {"convs": convs, "fcs": fcs}
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def _apply_norm(cfg, layer, x):
+    if "norm" not in layer:
+        return x
+    if cfg.norm == "bn":
+        return batchnorm_apply(layer["norm"], x)
+    groups = cfg.fed2_groups if cfg.fed2_groups else cfg.gn_groups
+    if x.shape[-1] % groups:
+        groups = 1
+    return groupnorm_apply(layer["norm"], x, groups=groups)
+
+
+def _grouped_flatten(x, g: int):
+    """(B, H, W, C) -> (B, G * H*W*C/G) keeping group-contiguous features."""
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, g, c // g).transpose(0, 3, 1, 2, 4)
+    return xg.reshape(b, g * h * w * (c // g))
+
+
+def apply_cnn(params, cfg: CNNConfig, x):
+    """x: (B, 32, 32, 3) -> logits (B, n_classes)."""
+    metas = layer_meta(cfg)
+    conv_metas = [m for m in metas if m.kind in ("c", "dw")]
+    fc_metas = [m for m in metas if m.kind in ("fc", "logits")]
+    ci = 0
+    for step in cfg.plan:
+        if step[0] == "p":
+            x = _maxpool(x)
+            continue
+        m, layer = conv_metas[ci], params["convs"][ci]
+        if m.kind == "dw":
+            x = jax.nn.relu(conv2d_apply(layer["dw"], x, stride=m.stride,
+                                         groups=m.c_in))
+            x = conv2d_apply(layer["w"], x, groups=m.groups)
+        else:
+            x = conv2d_apply(layer, x, stride=m.stride, groups=m.groups)
+        x = jax.nn.relu(_apply_norm(cfg, layer, x))
+        ci += 1
+    if cfg.is_mobilenet:
+        x = jnp.mean(x, axis=(1, 2))
+    else:
+        g = max(cfg.fed2_groups, 1)
+        if cfg.fed2_groups and x.shape[-1] % g == 0:
+            x = _grouped_flatten(x, g)
+        else:
+            x = x.reshape(x.shape[0], -1)
+    for i, (m, fc) in enumerate(zip(fc_metas, params["fcs"])):
+        x = (grouped_dense_apply if m.grouped_fc else dense_apply)(fc, x)
+        if m.kind != "logits":
+            x = jax.nn.relu(x)
+    return x[:, :cfg.n_classes]
+
+
+def cnn_loss(params, cfg: CNNConfig, batch):
+    logits = apply_cnn(params, cfg, batch["images"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    return -jnp.mean(gold)
+
+
+def cnn_accuracy(params, cfg: CNNConfig, batch):
+    logits = apply_cnn(params, cfg, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(
+        jnp.float32))

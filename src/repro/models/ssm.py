@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Train/prefill uses the chunked SSD algorithm with a lax.scan over chunks
+(intra-chunk attention-like einsums + inter-chunk state recurrence), so the
+lowered HLO holds only one (B, H, Q, Q) decay tile at a time. Decode is the
+O(1) recurrent state update.
+
+Layout: x (B, L, H, P) heads x headdim; B/C projections shared across heads
+(ngroups = 1); A is a per-head scalar decay (log-parameterized).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (conv1d_depthwise_apply, conv1d_depthwise_init,
+                                 dense_apply, dense_init, rmsnorm_apply,
+                                 rmsnorm_init, silu)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self):
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self):
+        return self.d_inner + 2 * self.d_state
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, *, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus, >0); a_log: (H,) (A = -exp);
+    b, c: (B, L, N); d_skip: (H,). Returns y: (B, L, H, P).
+    """
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+
+    def padl(t):
+        return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+
+    xp, dtp, bp, cp = padl(x), padl(dt), padl(b), padl(c)
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,) negative
+
+    # chunked views, scan axis first
+    xs = xp.reshape(bs, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    dts = dtp.reshape(bs, nc, q, h).transpose(1, 0, 2, 3)
+    bss = bp.reshape(bs, nc, q, n).transpose(1, 0, 2, 3)
+    css = cp.reshape(bs, nc, q, n).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((q, q), jnp.float32))
+
+    def body(hstate, inp):
+        xc, dtc, bc, cc = inp  # (B,q,h,p), (B,q,h), (B,q,n), (B,q,n)
+        da = dtc.astype(jnp.float32) * a  # (B,q,h) log-decay, negative
+        cum = jnp.cumsum(da, axis=1)      # inclusive cumsum
+        total = cum[:, -1]                # (B,h)
+        # pairwise decay L[b,h,i,j] = exp(cum_i - cum_j) for i >= j
+        # (mask in log space: the upper triangle would overflow exp)
+        logdec = cum[:, :, None, :] - cum[:, None, :, :]  # (B,i,j,h)
+        ldec = jnp.exp(jnp.where(tri[None, :, :, None] > 0, logdec, -jnp.inf))
+        cb = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))
+        intra = jnp.einsum("bij,bijh,bjh,bjhp->bihp", cb, ldec,
+                           dtc.astype(jnp.float32), xc.astype(jnp.float32))
+        # contribution of the carried state: decay to position i then read out
+        y_prev = jnp.einsum("bih,bin,bhpn->bihp", jnp.exp(cum),
+                            cc.astype(jnp.float32), hstate)
+        # new chunk state: sum_j exp(total - cum_j) dt_j B_j x_j^T
+        decay_out = jnp.exp(total[:, None] - cum)  # (B,q,h)
+        s_new = jnp.einsum("bjh,bjn,bjhp->bhpn", decay_out * dtc.astype(jnp.float32),
+                           bc.astype(jnp.float32), xc.astype(jnp.float32))
+        hstate = jnp.exp(total)[:, :, None, None] * hstate + s_new
+        y = intra + y_prev + d_skip[None, None, :, None] * xc.astype(jnp.float32)
+        return hstate, y.astype(x.dtype)
+
+    h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    # checkpoint the chunk step so backward recomputes the (B,H,Q,Q) decay
+    # tile instead of stacking it across all chunks
+    state, ys = jax.lax.scan(jax.checkpoint(body), h0, (xs, dts, bss, css))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bs, nc * q, h, p)[:, :l]
+    return y, state
+
+
+def ssd_step(hstate, x, dt, a_log, b, c, d_skip):
+    """Single-token recurrence. x: (B,H,P); dt: (B,H); b,c: (B,N).
+    hstate: (B,H,P,N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32) * a)  # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32),
+                     b.astype(jnp.float32), x.astype(jnp.float32))
+    hstate = da[..., None, None] * hstate + upd
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), hstate)
+    y = y + d_skip[None, :, None] * x.astype(jnp.float32)
+    return hstate, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 mixer block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg: SSMConfig, dtype=jnp.float32):
+    """Input projections are SPLIT (w_z, w_xbc, w_dt) rather than one fused
+    in_proj: mathematically identical (concat of columns) but each factor has
+    a clean mesh sharding — a fused projection would put z/x/B/C/dt slice
+    boundaries inside shards and force all-gathers under GSPMD."""
+    ks = jax.random.split(key, 5)
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    p = {
+        "w_z": dense_init(ks[0], cfg.d_model, di, dtype=dtype),
+        "w_xbc": dense_init(ks[3], cfg.d_model, cfg.conv_dim, dtype=dtype),
+        "w_dt": dense_init(ks[4], cfg.d_model, h, dtype=dtype),
+        "conv": conv1d_depthwise_init(ks[1], cfg.conv_dim, cfg.conv_kernel,
+                                      dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(ks[2], di, cfg.d_model, dtype=dtype),
+    }
+    return p
+
+
+def _project_in(p, x):
+    return dense_apply(p["w_z"], x), dense_apply(p["w_xbc"], x), \
+        dense_apply(p["w_dt"], x)
+
+
+def mamba2_apply(p, x, cfg: SSMConfig):
+    """Full-sequence mixer. x: (B, L, d_model)."""
+    bs, l, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z, xbc, dt = _project_in(p, x)
+    xbc = silu(conv1d_depthwise_apply(p["conv"], xbc))
+    xs = xbc[..., :di].reshape(bs, l, h, cfg.headdim)
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, _ = ssd_chunked(xs, dt, p["a_log"], bmat, cmat, p["d_skip"],
+                       chunk=cfg.chunk)
+    y = y.reshape(bs, l, di)
+    y = rmsnorm_apply(p["norm"], y * silu(z))
+    return dense_apply(p["out_proj"], y)
+
+
+def mamba2_cache_init(cfg: SSMConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state),
+                         jnp.float32),
+    }
+
+
+def mamba2_decode(p, x, cache, cfg: SSMConfig):
+    """One-token step. x: (B, 1, d_model)."""
+    bs = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z, xbc, dt = _project_in(p, x[:, 0])
+    # rolling conv state
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    w = p["conv"]["w"][:, 0, :]  # (K, C)
+    xbc = silu(jnp.einsum("bkc,kc->bc", window, w) + p["conv"]["b"])
+    new_conv = window[:, 1:]
+    xs = xbc[..., :di].reshape(bs, h, cfg.headdim)
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    state, y = ssd_step(cache["ssm"], xs, dt, p["a_log"], bmat, cmat,
+                        p["d_skip"])
+    y = y.reshape(bs, 1, di)
+    y = rmsnorm_apply(p["norm"], y * silu(z[:, None]))
+    out = dense_apply(p["out_proj"], y)
+    return out, {"conv": new_conv, "ssm": state}

@@ -1,0 +1,101 @@
+"""Minimal optimizer library (pytree-pure, optax-style (init, update))."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p, grads, params)
+        if momentum == 0.0:
+            new = jax.tree_util.tree_map(lambda p, g: p - lr_t * g,
+                                         params, grads)
+            return new, ()
+        vel = jax.tree_util.tree_map(lambda v, g: momentum * v + g,
+                                     state, grads)
+        new = jax.tree_util.tree_map(lambda p, v: p - lr_t * v, params, vel)
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=None) -> Optimizer:
+    """``state_dtype=jnp.float32`` keeps fp32 m/v for bf16 params (the
+    production configuration; sizes matter for the dry-run memory report)."""
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def _sd(p):
+        return state_dtype or p.dtype
+
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, _sd(p)), params)
+        v = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, _sd(p)), params)
+        return {"m": z, "v": v}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(m_.dtype),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) *
+            jnp.square(g.astype(v_.dtype)),
+            state["v"], grads)
+        lr_t = lr_fn(step)
+
+        def upd(p, m_, v_):
+            mh = m_ / (1 - b1 ** t)
+            vh = v_ / (1 - b2 ** t)
+            step_ = lr_t * (mh / (jnp.sqrt(vh) + eps) +
+                            weight_decay * p.astype(m_.dtype))
+            return (p.astype(m_.dtype) - step_).astype(p.dtype)
+
+        return jax.tree_util.tree_map(upd, params, m, v), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup_steps: int = 0, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+        prog = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return lr
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree_util.tree_leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype),
+                                  grads)

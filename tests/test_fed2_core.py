@@ -1,0 +1,201 @@
+"""Fed2 core: feature interpretation (Eq. 9/17), grouping, paired fusion
+(Eq. 18/19) — including the gradient-redirection invariant that IS the
+paper's mechanism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg9
+from repro.core import feature_stats as FS
+from repro.core import fusion
+from repro.core.grouping import GroupSpec, choose_decouple_depth
+from repro.models.cnn import apply_cnn, cnn_loss, init_cnn, layer_meta
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _data(n=8, n_classes=10):
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, 32, 32, 3))
+    y = jnp.arange(n) % n_classes
+    return x, y
+
+
+def test_class_preference_shapes_and_tv():
+    cfg = vgg9.reduced()
+    p = init_cnn(KEY, cfg)
+    x, y = _data()
+    pvecs = FS.class_preference_vectors(p, cfg, x, y)
+    metas = [m for m in layer_meta(cfg) if m.kind in ("c", "dw", "fc")]
+    assert len(pvecs) == len(metas)
+    for pv, m in zip(pvecs, metas):
+        assert pv.shape == (m.c_out, cfg.n_classes)
+    tvs = [float(FS.total_variance(pv)) for pv in pvecs]
+    assert all(np.isfinite(t) and t >= 0 for t in tvs)
+
+
+def test_feature_stats_kernel_path_matches():
+    cfg = vgg9.reduced()
+    p = init_cnn(KEY, cfg)
+    x, y = _data()
+    a = FS.class_preference_vectors(p, cfg, x, y, use_kernel=False)
+    b = FS.class_preference_vectors(p, cfg, x, y, use_kernel=True)
+    for pa, pb in zip(a, b):
+        np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
+                                   atol=1e-3, rtol=1e-3)
+
+
+def test_gradient_redirection_isolation():
+    """THE Fed2 mechanism (Eq. 16): in the decoupled layers, the gradient of
+    class c's loss w.r.t. group g's parameters is ZERO unless c is allocated
+    to g."""
+    cfg = vgg9.reduced(fed2_groups=5, decouple=2, norm="none")
+    p = init_cnn(KEY, cfg)
+    x, _ = _data(5, 10)
+    spec = GroupSpec.contiguous(5, 10)
+
+    def loss_class_c(params, c):
+        logits = apply_cnn(params, cfg, x)
+        return jnp.sum(logits[:, c])
+
+    metas = layer_meta(cfg)
+    fc_metas = [m for m in metas if m.kind in ("fc", "logits")]
+    for c in [0, 3, 9]:
+        g_own = spec.group_of_class(c)
+        grads = jax.grad(loss_class_c)(p, c)
+        for fi, m in enumerate(fc_metas):
+            if not m.grouped_fc:
+                continue
+            gw = np.asarray(grads["fcs"][fi]["w"])  # (G, in, out)
+            for g in range(5):
+                norm = np.abs(gw[g]).sum()
+                if g == g_own:
+                    assert norm > 0, (c, fi, g)
+                else:
+                    assert norm == 0, (c, fi, g, norm)
+
+
+def test_group_spec():
+    spec = GroupSpec.contiguous(5, 10)
+    assert spec.classes_per_group[0] == (0, 1)
+    assert spec.group_of_class(9) == 4
+    assert spec.logit_signature(2) == frozenset({4, 5})
+    # more groups than classes
+    spec2 = GroupSpec.contiguous(10, 5)
+    assert spec2.classes_per_group[0] == (0,)
+    assert spec2.classes_per_group[9] == (4,)
+
+
+def test_choose_decouple_depth():
+    tvs = [0.1, 0.1, 0.12, 0.5, 0.9, 1.0]
+    # surge at index 3 -> decouple trailing 3, but min_shared=4 -> 2
+    assert choose_decouple_depth(tvs, threshold_frac=0.45, min_shared=4) == 2
+    assert choose_decouple_depth(tvs, threshold_frac=0.45, min_shared=2) == 3
+    assert choose_decouple_depth([1.0], min_shared=4) == 0
+
+
+def test_paired_average_equals_fedavg_under_identity():
+    cfg = vgg9.full()
+    p = init_cnn(KEY, cfg)
+    ga = fusion.cnn_group_axes(p, cfg)
+    stacked = jax.tree_util.tree_map(
+        lambda a: jnp.stack([a, 2 * a, 3 * a]), p)
+    got = fusion.paired_average(stacked, ga)
+    want = fusion.fedavg(stacked)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_paired_average_undoes_group_permutation():
+    """Eq. 19 semantics: if a node stores its groups in permuted order,
+    pairing by logit signature must recover the aligned average."""
+    cfg = vgg9.full(fed2_groups=10, decouple=3)
+    p = init_cnn(KEY, cfg)
+    ga = fusion.cnn_group_axes(p, cfg)
+    perm = np.random.default_rng(0).permutation(10)
+    inv = np.argsort(perm)
+
+    def permute_leaf(leaf, gax):
+        if gax is None:
+            return leaf
+        ax, g = gax.axis, gax.n_groups
+        blk = leaf.shape[ax] // g
+        shp = leaf.shape[:ax] + (g, blk) + leaf.shape[ax + 1:]
+        return jnp.take(leaf.reshape(shp), perm, axis=ax).reshape(leaf.shape)
+
+    p_perm = jax.tree_util.tree_map(
+        permute_leaf, p, ga,
+        is_leaf=lambda x: x is None or isinstance(x, fusion.GroupAxis))
+    stacked = jax.tree_util.tree_map(lambda a, b: jnp.stack([a, b]),
+                                     p, p_perm)
+    perms = np.stack([np.arange(10), inv])
+    got = fusion.paired_average(stacked, ga, perms=perms)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_presence_weighted_paired_average():
+    """Eq. 19 non-IID refinement: a node lacking all of group g's classes
+    contributes zero to group g; shared leaves keep the plain mean."""
+    spec = GroupSpec.contiguous(2, 4)
+    counts = np.array([[5, 5, 0, 0],    # node 0 holds group-0 classes only
+                       [0, 0, 3, 3]])   # node 1 holds group-1 classes only
+    gw = fusion.presence_group_weights(counts, spec)
+    np.testing.assert_allclose(gw, [[10, 0], [0, 6]])
+    stacked = {"g": jnp.stack([jnp.ones((2, 4)), 3 * jnp.ones((2, 4))]),
+               "s": jnp.stack([jnp.zeros(3), 2 * jnp.ones(3)])}
+    ga = {"g": fusion.GroupAxis(0, 2), "s": None}
+    out = fusion.paired_average(stacked, ga, group_weights=gw)
+    # group 0 <- node 0 only (1.0); group 1 <- node 1 only (3.0)
+    np.testing.assert_allclose(np.asarray(out["g"][0]), np.ones(4))
+    np.testing.assert_allclose(np.asarray(out["g"][1]), 3 * np.ones(4))
+    np.testing.assert_allclose(np.asarray(out["s"]), np.ones(3))
+
+
+def test_presence_weights_no_holder_fallback():
+    spec = GroupSpec.contiguous(2, 4)
+    counts = np.array([[5, 5, 0, 0], [4, 4, 0, 0]])  # nobody holds group 1
+    gw = fusion.presence_group_weights(counts, spec)
+    stacked = {"g": jnp.stack([jnp.ones((2, 2)), 3 * jnp.ones((2, 2))])}
+    ga = {"g": fusion.GroupAxis(0, 2)}
+    out = fusion.paired_average(stacked, ga, group_weights=gw)
+    # group 1 falls back to uniform mean = 2.0
+    np.testing.assert_allclose(np.asarray(out["g"][1]), 2 * np.ones(2))
+
+
+def test_fedprox_penalty():
+    cfg = vgg9.reduced()
+    p = init_cnn(KEY, cfg)
+    assert float(fusion.fedprox_penalty(p, p, 0.1)) == 0.0
+    p2 = jax.tree_util.tree_map(lambda a: a + 1.0, p)
+    assert float(fusion.fedprox_penalty(p2, p, 0.1)) > 0
+
+
+def test_fedavg_weighted():
+    stacked = {"w": jnp.stack([jnp.ones(3), 3 * jnp.ones(3)])}
+    out = fusion.fedavg(stacked, weights=[1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5 * np.ones(3))
+
+
+def test_lm_group_axes_marks_grouped_ffn_and_unembed():
+    from repro.configs import get_config
+    from repro.configs.common import with_fed2
+    from repro.models.transformer import init_params
+    cfg = with_fed2(get_config("llama3.2-1b", reduced=True), groups=4,
+                    decouple=1)
+    p = init_params(KEY, cfg)
+    ga = fusion.lm_group_axes(p, cfg)
+    # unembed grouped
+    assert isinstance(ga["unembed"]["w"], fusion.GroupAxis)
+    # gblock ffn leaves grouped; attention leaves not
+    flat = jax.tree_util.tree_flatten_with_path(
+        ga["gblocks"],
+        is_leaf=lambda x: x is None or isinstance(x, fusion.GroupAxis))[0]
+    ffn_marks = [v for k, v in flat if "ffn" in str(k)]
+    attn_marks = [v for k, v in flat if "attn" in str(k)]
+    assert any(isinstance(v, fusion.GroupAxis) for v in ffn_marks)
+    assert all(v is None for v in attn_marks)

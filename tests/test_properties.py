@@ -1,0 +1,103 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fusion
+from repro.core.grouping import GroupSpec
+from repro.core.matching import match_permutation
+from repro.data.synthetic import dirichlet_partition, nxc_partition
+from repro.kernels import ops, ref
+
+SET = settings(max_examples=20, deadline=None)
+
+
+@SET
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(1, 64))
+def test_fedavg_idempotent_on_identical_clients(n, d1, d2):
+    leaf = jnp.arange(d1 * d2, dtype=jnp.float32).reshape(d1, d2)
+    stacked = jnp.broadcast_to(leaf[None], (n,) + leaf.shape)
+    out = fusion.fedavg({"w": stacked})
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(leaf),
+                               atol=1e-6)
+
+
+@SET
+@given(st.integers(2, 5), st.integers(2, 8))
+def test_paired_average_permutation_invariance(n, g):
+    """Permuting every node's group blocks (with matching perms) never
+    changes the paired average — Fed2's Eq. 19 as a property."""
+    rng = np.random.default_rng(n * 31 + g)
+    blk = 3
+    base = rng.normal(size=(n, g * blk, 4)).astype(np.float32)
+    perms = np.stack([rng.permutation(g) for _ in range(n)])
+    permuted = np.stack([
+        base[i].reshape(g, blk, 4)[np.argsort(perms[i])].reshape(g * blk, 4)
+        for i in range(n)])
+    # paired_average with perms must equal plain mean of the unpermuted base
+    ga = {"w": fusion.GroupAxis(0, g)}
+    got = fusion.paired_average({"w": jnp.asarray(permuted)}, ga,
+                                perms=perms)
+    np.testing.assert_allclose(np.asarray(got["w"]), base.mean(0), atol=1e-5)
+
+
+@SET
+@given(st.integers(2, 40), st.integers(2, 10))
+def test_match_permutation_recovers_exact_permutation(rows, cols):
+    rng = np.random.default_rng(rows * 7 + cols)
+    ref_rows = rng.normal(size=(rows, cols))
+    perm = rng.permutation(rows)
+    shuffled = ref_rows[perm]
+    got = match_permutation(ref_rows, shuffled)
+    # rows[got] == ref  =>  got must invert perm
+    np.testing.assert_array_equal(shuffled[got], ref_rows)
+
+
+@SET
+@given(st.integers(2, 30), st.integers(1, 10), st.integers(2, 10))
+def test_nxc_partition_class_budget(n_nodes, cpn, n_classes):
+    cpn = min(cpn, n_classes)
+    labels = np.random.default_rng(0).integers(
+        0, n_classes, size=600).astype(np.int32)
+    parts = nxc_partition(labels, n_nodes, cpn, n_classes, seed=1)
+    assert len(parts) == n_nodes
+    seen = np.concatenate([p for p in parts if len(p)])
+    assert len(seen) == len(np.unique(seen))  # disjoint
+    for p in parts:
+        if len(p):
+            assert len(np.unique(labels[p])) <= cpn
+
+
+@SET
+@given(st.integers(2, 20), st.floats(0.05, 5.0))
+def test_dirichlet_partition_complete_and_disjoint(n_nodes, alpha):
+    labels = np.random.default_rng(0).integers(0, 10, size=500).astype(
+        np.int32)
+    parts = dirichlet_partition(labels, n_nodes, alpha, 10, seed=2)
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(500))
+
+
+@SET
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(1, 5),
+       st.integers(1, 5))
+def test_grouped_matmul_property(g, k, n, m):
+    x = np.random.default_rng(g * k + n).normal(
+        size=(m * 3, g * k * 2)).astype(np.float32)
+    w = np.random.default_rng(1).normal(size=(g, k * 2, n * 4)).astype(
+        np.float32)
+    got = ops.grouped_matmul(jnp.asarray(x), jnp.asarray(w))
+    want = ref.grouped_matmul_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_group_spec_signatures_unique_and_cover():
+    for g, c in [(5, 10), (10, 10), (10, 100), (20, 100), (10, 5)]:
+        spec = GroupSpec.contiguous(g, c)
+        sigs = [spec.logit_signature(i) for i in range(g)]
+        covered = set()
+        for s in sigs:
+            covered |= s
+        assert covered == set(range(c))
