@@ -1,0 +1,24 @@
+# Tier-1 verify + smoke targets. PYTHONPATH is injected per-recipe so the
+# targets work from a clean shell.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test smoke bench-infra dryrun-fl
+
+# the tier-1 gate (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# lower+compile the sharded round engine on the 1-device host mesh:
+# exercises the mesh code path (sharding constraints, collective lowering)
+# for all four fusion methods without TPUs
+smoke:
+	$(PY) -m repro.launch.fl_dryrun --mesh host --clients 4 \
+	    --local-steps 2 --batch 8 --seq 32
+
+# full production-mesh dry-run matrix (fake 16x16 pod; slower)
+dryrun-fl:
+	$(PY) -m repro.launch.fl_dryrun
+
+bench-infra:
+	REPRO_BENCH_SET=infra $(PY) -m benchmarks.run

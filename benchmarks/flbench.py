@@ -115,3 +115,94 @@ def csv_line(rec, extra=""):
     epochs = rec["rounds"] * rec["local_epochs"]
     return (f"{rec['name']},{rec['wall_s'] * 1e6 / max(epochs, 1):.0f},"
             f"best_acc={rec['best_acc']:.4f}{extra}")
+
+
+# ---------------------------------------------------------------------------
+# Engine throughput: one jitted round vs the seed-style host loop
+# ---------------------------------------------------------------------------
+
+ARTIFACTS_PERF = os.path.join(os.path.dirname(__file__), "artifacts_perf")
+
+
+def bench_engine(*, nodes=4, rounds=None, steps_per_epoch=6,
+                 batch=16) -> dict:
+    """Steady-state rounds/sec: the fused round engine (one jitted round,
+    no per-round host sync) vs the seed-style loop, both warmed up
+    (compile excluded) and fed the same fixed batch set — the final params
+    of the two sequences must agree."""
+    import jax
+    from repro.core import fusion as fusion_lib
+    from repro.fl.engine import make_local_phase, make_round_engine
+    from repro.fl.runtime import _pack_client_batches
+    from repro.optim.optimizers import sgd
+
+    rounds = rounds or (6 if QUICK else 14)
+    ds, _ = dataset()
+    parts = nxc_partition(ds.labels, nodes, 5, N_CLASSES, seed=0)
+
+    def get_batch(sel):
+        return {"images": jnp.asarray(ds.images[sel]),
+                "labels": jnp.asarray(ds.labels[sel])}
+
+    cfg = model_cfg("vgg9", "fed2")
+    fl = FLConfig(n_nodes=nodes, rounds=rounds, local_epochs=1,
+                  steps_per_epoch=steps_per_epoch, batch_size=batch,
+                  lr=0.008, momentum=0.9, method="fed2", seed=0)
+    task = cnn_task(cfg)
+    weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
+    gp0 = task.init_fn(jax.random.PRNGKey(0))
+    batches = _pack_client_batches(parts, get_batch, steps_per_epoch,
+                                   batch, np.random.default_rng(0))
+
+    engine = make_round_engine(task, fl, gp0, weights=weights)
+    jax.block_until_ready(engine.run_round(gp0, batches))     # compile
+    t0 = time.time()
+    g_e = gp0
+    for _ in range(rounds):
+        g_e = engine.run_round(g_e, batches)
+    jax.block_until_ready(g_e)
+    engine_s = time.time() - t0
+
+    local = jax.jit(make_local_phase(task, fl, sgd(fl.lr, fl.momentum)))
+    ga = task.group_axes_fn(gp0)
+
+    def seed_round(g):
+        stacked = fusion_lib.broadcast_global(g, nodes)
+        stacked = local(stacked, batches, g)
+        out = fusion_lib.paired_average(stacked, ga, weights=weights)
+        jax.block_until_ready(out)    # the seed loop synced every round
+        return out
+
+    seed_round(gp0)                                           # compile
+    t0 = time.time()
+    g_s = gp0
+    for _ in range(rounds):
+        g_s = seed_round(g_s)
+    seed_s = time.time() - t0
+
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree_util.tree_leaves(g_e),
+                               jax.tree_util.tree_leaves(g_s)))
+    rec = {"name": "flbench_engine", "nodes": nodes, "rounds": rounds,
+           "engine_s": round(engine_s, 3), "seed_loop_s": round(seed_s, 3),
+           "engine_rounds_per_s": round(rounds / engine_s, 3),
+           "seed_rounds_per_s": round(rounds / seed_s, 3),
+           "speedup": round(seed_s / engine_s, 3),
+           "max_param_diff": diff, "params_match": bool(diff < 1e-4)}
+    os.makedirs(ARTIFACTS_PERF, exist_ok=True)
+    with open(os.path.join(ARTIFACTS_PERF, "flbench_engine.json"),
+              "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    rec = bench_engine()
+    us = 1e6 * rec["engine_s"] / rec["rounds"]
+    print(f"fl_engine_round,{us:.0f},"
+          f"speedup_vs_seed_loop={rec['speedup']:.2f}x,"
+          f"params_match={rec['params_match']}")
+
+
+if __name__ == "__main__":
+    main()

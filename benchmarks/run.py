@@ -25,6 +25,7 @@ def main() -> None:
     infra_modules = [
         "benchmarks.kernel_bench",
         "benchmarks.roofline",
+        "benchmarks.flbench",             # engine vs seed-loop rounds/sec
     ]
     # infra first: the roofline table is the most load-bearing output
     mods = (infra_modules + fl_modules if which == "all" else

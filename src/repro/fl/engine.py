@@ -1,0 +1,200 @@
+"""Sharded federated round engine (DESIGN.md §5).
+
+ONE jit-compiled function runs a full federated round:
+
+    stacked <- broadcast(global)             # round start
+    stacked <- vmap(local_sgd)(stacked, client_batches)
+    global  <- fuse(stacked)                 # fedavg | fed2 paired | ...
+
+parameterized by *placement*:
+
+  - ``mesh=None``   single host: the client axis is a plain vmapped batch.
+  - ``mesh=...``    the client axis is sharded over the mesh "data" axis
+                    (launch/mesh.py); fusion is then a mean over a sharded
+                    axis and lowers to ONE all-reduce — Fed2's structural
+                    pre-alignment means paired averaging (Eq. 19) costs
+                    exactly FedAvg's collective, with zero matching step.
+
+Method handling inside the single jitted round:
+
+  fedavg / fedprox  coordinate mean (Eq. 1/18); fedprox adds the proximal
+                    term to the local loss only.
+  fed2              feature paired averaging (Eq. 19) over the group-axis
+                    tree, optionally presence-weighted (non-IID).
+  fedma             the round function returns the STACKED client params;
+                    Hungarian matching (core/matching.py) runs on the host
+                    between rounds. That host gather + per-round matching
+                    cost is precisely the overhead the paper's structural
+                    alignment removes — the engine makes the asymmetry
+                    measurable (see launch/fl_dryrun.py records).
+
+``lower_round`` lowers the same round function against ShapeDtypeStructs
+(no arrays allocated) for dry-run compilation on any mesh — the basis of
+``python -m repro.launch.fl_dryrun`` and the Makefile smoke target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import fusion as fusion_lib
+from repro.optim.optimizers import Optimizer, sgd
+
+PyTree = Any
+
+
+def _client_sharding(mesh, ndim: int) -> NamedSharding:
+    """Leading client axis on "data", everything else replicated."""
+    return NamedSharding(mesh, P("data", *([None] * (ndim - 1))))
+
+
+def make_local_phase(task, cfg, opt: Optimizer) -> Callable:
+    """(stacked, batches, global_params) -> stacked after the local phase:
+    one scan over local steps per client, vmapped over the client axis."""
+
+    def local_loss(params, batch, global_params):
+        loss = task.loss_fn(params, batch)
+        if cfg.method == "fedprox":
+            loss = loss + fusion_lib.fedprox_penalty(params, global_params,
+                                                     cfg.prox_mu)
+        return loss
+
+    def one_client(params, batches, global_params):
+        state = opt.init(params)
+
+        def step(carry, batch):
+            p, s, i = carry
+            g = jax.grad(local_loss)(p, batch, global_params)
+            p, s = opt.update(g, s, p, i)
+            return (p, s, i + 1), None
+
+        (params, _, _), _ = jax.lax.scan(
+            step, (params, state, jnp.zeros((), jnp.int32)), batches)
+        return params
+
+    def local_phase(stacked, batches, global_params):
+        return jax.vmap(one_client, in_axes=(0, 0, None))(
+            stacked, batches, global_params)
+
+    return local_phase
+
+
+@dataclasses.dataclass
+class RoundEngine:
+    """One federated round as one compiled function.
+
+    round_fn(global_params, batches) returns the new global params — except
+    for fedma, where it returns the stacked client params and ``host_fuse``
+    completes the round on the host (matching is not a device program)."""
+    n_nodes: int
+    mesh: Any
+    round_fn: Callable
+    eval_fn: Callable
+    host_fuse: Callable | None = None
+
+    def run_round(self, global_params: PyTree, batches: PyTree) -> PyTree:
+        out = self.round_fn(global_params, batches)
+        if self.host_fuse is not None:
+            out = self.host_fuse(out)
+        return out
+
+
+def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
+                      weights=None, group_weights=None,
+                      use_kernel: bool | None = None) -> RoundEngine:
+    """Build the engine for (task, cfg).
+
+    params_like: a params pytree or its eval_shape — only the tree structure
+    and leaf shapes are read (to derive the group-axis tree).
+    weights: per-client sample weights (N,), fixed for the run.
+    group_weights: (N, G) presence weights for fed2's non-IID refinement.
+    use_kernel: route fusion through the Pallas flatten-to-(N, M) fast path;
+    default (None) = ``fusion.default_use_kernel()``. Forced off under a
+    mesh, where the tree reduction is the path that lowers to one
+    all-reduce (the kernel fast path is a single-host optimization)."""
+    if cfg.method not in ("fedavg", "fedprox", "fed2", "fedma"):
+        raise ValueError(f"unknown fusion method: {cfg.method!r}")
+    opt = sgd(cfg.lr, cfg.momentum)
+    local_phase = make_local_phase(task, cfg, opt)
+    n = cfg.n_nodes
+    if use_kernel is None:
+        use_kernel = fusion_lib.default_use_kernel()
+    use_kernel = use_kernel and mesh is None
+    w = None if weights is None else jnp.asarray(weights, jnp.float32)
+    gw = None if group_weights is None else jnp.asarray(group_weights,
+                                                        jnp.float32)
+    ga = None
+    if cfg.method == "fed2":
+        if task.group_axes_fn is None:
+            raise ValueError("fed2 requires task.group_axes_fn")
+        ga = task.group_axes_fn(params_like)
+
+    def round_fn(global_params, batches):
+        stacked = fusion_lib.broadcast_global(global_params, n)
+        if mesh is not None:
+            stacked = jax.lax.with_sharding_constraint(
+                stacked, jax.tree_util.tree_map(
+                    lambda l: _client_sharding(mesh, l.ndim), stacked))
+        stacked = local_phase(stacked, batches, global_params)
+        if cfg.method == "fed2":
+            return fusion_lib.paired_average(stacked, ga, weights=w,
+                                             group_weights=gw,
+                                             use_kernel=use_kernel)
+        if cfg.method == "fedma":
+            return stacked          # fused on the host (see class docstring)
+        return fusion_lib.fedavg(stacked, w, use_kernel=use_kernel)
+
+    host_fuse = None
+    if cfg.method == "fedma":
+        if task.matched_average_fn is None:
+            raise ValueError("fedma requires task.matched_average_fn "
+                             "(defined for non-grouped CNNs)")
+        host_fuse = lambda stacked: task.matched_average_fn(stacked, weights)  # noqa: E731
+
+    return RoundEngine(n_nodes=n, mesh=mesh, round_fn=jax.jit(round_fn),
+                       eval_fn=jax.jit(task.eval_fn), host_fuse=host_fuse)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run lowering (no arrays allocated)
+# ---------------------------------------------------------------------------
+
+
+def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int):
+    """Lower one full round on ``mesh`` from ShapeDtypeStructs.
+
+    batch_elems: per-sample batch element specs WITHOUT the leading
+    (clients, steps) axes, e.g. ``{"images": ((B, 32, 32, 3), jnp.float32),
+    "labels": ((B,), jnp.int32)}``. Returns the jax ``Lowered`` for
+    ``round_fn(global_specs, batch_specs)``.
+    """
+    n = cfg.n_nodes
+    param_shapes = jax.eval_shape(task.init_fn, jax.random.PRNGKey(0))
+    engine = make_round_engine(task, cfg, param_shapes, mesh=mesh,
+                               use_kernel=False)
+    gspecs = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=NamedSharding(mesh, P())),
+        param_shapes)
+    bspecs = {
+        name: jax.ShapeDtypeStruct(
+            (n, local_steps) + tuple(shape), dtype,
+            sharding=_client_sharding(mesh, 2 + len(shape)))
+        for name, (shape, dtype) in batch_elems.items()
+    }
+    with mesh:      # jax 0.4.x: Mesh is the context manager
+        return engine.round_fn.lower(gspecs, bspecs)
+
+
+def stacked_param_bytes(task, n_clients: int) -> int:
+    """Size of the stacked client tree — what a host-side fusion (fedma)
+    must gather off-device every round."""
+    shapes = jax.eval_shape(task.init_fn, jax.random.PRNGKey(0))
+    return n_clients * sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(shapes))

@@ -1,23 +1,24 @@
 """Federated learning runtime.
 
-Clients execute SIMULTANEOUSLY as a vmapped batch over stacked params —
-the single-host analog of the mesh execution in launch/train.py where the
-client axis is sharded over the mesh "data" axis (DESIGN.md §5). A round is:
-
-    stacked <- broadcast(global)            # round start
-    stacked <- vmap(local_sgd)(stacked, client_batches)
-    global  <- fuse(stacked)                # fedavg | fed2 paired | fedma
+Thin host loop over the sharded round engine (fl/engine.py): clients
+execute SIMULTANEOUSLY as a vmapped batch over stacked params, and one
+jitted function runs the whole round — broadcast, local SGD, fusion
+(DESIGN.md §5). Pass ``mesh=`` to shard the client axis over the mesh
+"data" axis; leave it None for single-host vmap.
 
 Fusion methods:
   fedavg   coordinate-based mean (Eq. 1), sample-weighted
   fedprox  fedavg + proximal local loss (mu/2 ||w - w_g||^2)
   fed2     feature paired averaging (Eq. 19) over the group-axis tree
   fedma    one-shot matched averaging (WLA baseline, core/matching.py)
+
+The host never blocks on device values inside the round loop: batches are
+staged ahead, eval results stay device-resident, and accuracies are
+materialized once after the last round (or lazily when ``log`` is given).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Callable
 
@@ -27,7 +28,7 @@ import numpy as np
 
 from repro.core import fusion as fusion_lib
 from repro.core import matching as matching_lib
-from repro.optim.optimizers import Optimizer, sgd
+from repro.fl.engine import make_round_engine
 
 PyTree = Any
 
@@ -57,38 +58,6 @@ class FLTask:
     matched_average_fn: Callable | None = None               # fedma
 
 
-def _make_local_update(task: FLTask, cfg: FLConfig, opt: Optimizer):
-    """jit-compiled: one client's full local phase (scan over steps),
-    vmapped over the stacked client axis."""
-
-    def local_loss(params, batch, global_params):
-        loss = task.loss_fn(params, batch)
-        if cfg.method == "fedprox":
-            loss = loss + fusion_lib.fedprox_penalty(params, global_params,
-                                                     cfg.prox_mu)
-        return loss
-
-    def one_client(params, batches, global_params):
-        state = opt.init(params)
-
-        def step(carry, batch):
-            p, s, i = carry
-            g = jax.grad(local_loss)(p, batch, global_params)
-            p, s = opt.update(g, s, p, i)
-            return (p, s, i + 1), None
-
-        (params, _, _), _ = jax.lax.scan(
-            step, (params, state, jnp.zeros((), jnp.int32)), batches)
-        return params
-
-    @jax.jit
-    def all_clients(stacked_params, stacked_batches, global_params):
-        return jax.vmap(one_client, in_axes=(0, 0, None))(
-            stacked_params, stacked_batches, global_params)
-
-    return all_clients
-
-
 def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
     """Per round: (N, n_steps, B, ...) batch arrays, sampling with
     replacement where a client's shard is short."""
@@ -108,8 +77,8 @@ def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
 
 
 def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
-                  test_batches, *, log=None,
-                  class_counts=None, group_spec=None) -> dict:
+                  test_batches, *, log=None, class_counts=None,
+                  group_spec=None, mesh=None, use_kernel=None) -> dict:
     """parts: list of per-client index arrays; get_batch(sel)->batch dict;
     test_batches: list of batch dicts for global eval.
 
@@ -117,43 +86,42 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     fed2: group g fuses only across nodes that hold g's classes
     (presence-weighted paired averaging).
 
-    Returns history {round, acc, loss, wall}."""
+    mesh: optional launch/mesh.py mesh — shards the client axis over "data".
+    use_kernel: force the Pallas fusion fast path on/off (None = default).
+
+    Returns history {round, acc, wall, wall_total, final_params}. Per-round
+    ``wall`` entries are host DISPATCH timestamps (rounds execute
+    asynchronously unless ``log`` forces a sync); ``wall_total`` is the
+    true end-to-end time including the final materialization."""
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     global_params = task.init_fn(key)
-    opt = sgd(cfg.lr, cfg.momentum)
-    local_update = _make_local_update(task, cfg, opt)
     weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
+    gw = None
+    if cfg.method == "fed2" and class_counts is not None \
+            and group_spec is not None:
+        gw = fusion_lib.presence_group_weights(class_counts, group_spec)
+    engine = make_round_engine(task, cfg, global_params, mesh=mesh,
+                               weights=weights, group_weights=gw,
+                               use_kernel=use_kernel)
 
-    eval_fn = jax.jit(task.eval_fn)
     history = {"round": [], "acc": [], "wall": []}
     n_steps = cfg.local_epochs * cfg.steps_per_epoch
+    accs = []                      # device scalars; materialized at the end
     t0 = time.time()
     for r in range(cfg.rounds):
-        stacked = fusion_lib.broadcast_global(global_params, cfg.n_nodes)
         batches = _pack_client_batches(parts, get_batch, n_steps,
                                        cfg.batch_size, rng)
-        stacked = local_update(stacked, batches, global_params)
-        if cfg.method == "fed2":
-            ga = task.group_axes_fn(global_params)
-            gw = None
-            if class_counts is not None and group_spec is not None:
-                gw = fusion_lib.presence_group_weights(class_counts,
-                                                       group_spec)
-            global_params = fusion_lib.paired_average(stacked, ga,
-                                                      weights=weights,
-                                                      group_weights=gw)
-        elif cfg.method == "fedma":
-            global_params = task.matched_average_fn(stacked, weights)
-        else:
-            global_params = fusion_lib.fedavg(stacked, weights)
-        acc = float(np.mean([float(eval_fn(global_params, tb))
-                             for tb in test_batches]))
+        global_params = engine.run_round(global_params, batches)
+        acc = jnp.mean(jnp.stack([engine.eval_fn(global_params, tb)
+                                  for tb in test_batches]))
+        accs.append(acc)
         history["round"].append(r)
-        history["acc"].append(acc)
         history["wall"].append(time.time() - t0)
-        if log:
-            log(f"round {r:3d} acc {acc:.4f}")
+        if log:                    # logging opts into the per-round sync
+            log(f"round {r:3d} acc {float(acc):.4f}")
+    history["acc"] = [float(a) for a in accs]
+    history["wall_total"] = time.time() - t0
     history["final_params"] = global_params
     return history
 

@@ -84,10 +84,13 @@ def ssd_update(h, x, dt, a_log, b, c, d_skip, *, bh: int = 8):
 
 def paired_fusion(stacked, weights, *, group_axis=None, perms=None,
                   bm: int = 1024):
-    """Fused weighted client averaging of ONE stacked leaf (N, ...).
-    Optional Fed2 pairing: reorder each client's group blocks (group_axis =
-    (axis, n_groups) in the per-client view) by ``perms`` (N, G) before the
-    reduction."""
+    """Fused weighted client averaging of ONE stacked leaf (N, ...) — the
+    unit the engine's flatten-to-(N, M) fast path (core/fusion.py) calls
+    per bucket. Optional Fed2 pairing: reorder each client's group blocks
+    (group_axis = (axis, n_groups) in the per-client view) by ``perms``
+    (N, G) before the reduction. The tile is shrunk to the smallest lane
+    multiple covering small inputs so tiny buckets don't pad to a full
+    ``bm`` block."""
     n = stacked.shape[0]
     x = stacked
     if perms is not None and group_axis is not None:
@@ -102,6 +105,7 @@ def paired_fusion(stacked, weights, *, group_axis=None, perms=None,
         x = xr.reshape(x.shape)
     flat = x.reshape(n, -1)
     m0 = flat.shape[1]
+    bm = min(bm, -(-m0 // 128) * 128)       # lane-aligned, no 1024-padding
     flat, _ = _pad_to(flat, bm, 1)
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.sum(w)

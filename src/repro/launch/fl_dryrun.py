@@ -1,106 +1,203 @@
-"""Dry-run of the FEDERATED round itself on the production mesh — the
-paper's technique as a distributed program (DESIGN.md §5):
+"""Dry-run of the FEDERATED round on a production (or host) mesh — the
+paper's technique as a distributed program (DESIGN.md §5), lowered through
+the SAME round engine (fl/engine.py) that serves real runs:
 
   stacked client params: leading client axis sharded over mesh "data"
   local SGD steps:       vmapped over clients (pure data-parallel)
   Fed2 fusion (Eq. 19):  paired averaging = mean over the client axis
                          -> ONE all-reduce over "data" in the lowered HLO
+  FedMA:                 the device program ENDS at the stacked params;
+                         matching runs on the host, so its record shows
+                         zero fusion collectives plus the per-round
+                         host-gather bytes Fed2 never pays.
+
+Covers all four fusion methods (fedavg/fedprox/fed2/fedma) x both model
+families (cnn + lm); one collective-bytes JSON record per combination.
 
   PYTHONPATH=src python -m repro.launch.fl_dryrun [--clients 16]
+  PYTHONPATH=src python -m repro.launch.fl_dryrun --mesh host   # CPU smoke
 """
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+import sys
+
+
+def _mesh_kind(argv) -> str:
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return "pod"
+
+
+# jax locks the device count on first init: force the fake pod BEFORE any
+# jax import, but only when this module IS the program and wants the pod
+# mesh (the host-mesh smoke path and library importers keep real devices).
+if __name__ == "__main__" and _mesh_kind(sys.argv) == "pod":
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                               + os.environ.get("XLA_FLAGS", ""))
 
 import argparse      # noqa: E402
 import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
 
-import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs import vgg9                      # noqa: E402
-from repro.core import fusion as fusion_lib         # noqa: E402
-from repro.launch.dryrun import collective_bytes    # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.models.cnn import cnn_loss, init_cnn     # noqa: E402
-from repro.optim.optimizers import sgd              # noqa: E402
+from repro.fl.engine import lower_round, stacked_param_bytes  # noqa: E402
+from repro.fl.runtime import FLConfig, cnn_task, lm_task      # noqa: E402
+from repro.launch.dryrun import collective_bytes              # noqa: E402
+from repro.launch.mesh import (make_host_mesh,                # noqa: E402
+                               make_production_mesh)
+
+METHODS = ("fedavg", "fedprox", "fed2", "fedma")
+FAMILIES = ("cnn", "lm")
+
+
+def _cnn_case(method: str, mesh_kind: str):
+    from repro.configs import vgg9
+    if mesh_kind == "host":     # reduced widths: CPU smoke compiles fast
+        cfg = (vgg9.reduced(fed2_groups=5, decouple=3, norm="gn")
+               if method == "fed2" else vgg9.reduced(fed2_groups=0,
+                                                     norm="none"))
+    else:
+        cfg = (vgg9.full(fed2_groups=10, decouple=6, norm="gn")
+               if method == "fed2" else vgg9.baseline())
+    return cnn_task(cfg), cfg.arch_id
+
+
+def _lm_case(method: str):
+    from repro.configs import get_config
+    from repro.configs.common import with_fed2
+    cfg = get_config("llama3.2-1b", reduced=True)
+    if method == "fed2":
+        cfg = with_fed2(cfg, groups=4, decouple=1)
+    return lm_task(cfg), "llama3.2-1b-reduced"
+
+
+def _batch_elems(family: str, batch: int, seq: int) -> dict:
+    if family == "cnn":
+        return {"images": ((batch, 32, 32, 3), jnp.float32),
+                "labels": ((batch,), jnp.int32)}
+    return {"tokens": ((batch, seq), jnp.int32),
+            "labels": ((batch, seq), jnp.int32),
+            "mask": ((batch, seq), jnp.float32)}
+
+
+def run_one(method: str, family: str, mesh, mesh_name: str, *,
+            clients: int, local_steps: int, batch: int, seq: int,
+            outdir: str, verbose: bool = True) -> dict:
+    tag = f"fl_round_{method}_{family}_{mesh_name}"
+    rec = {"kind": "fl_round", "method": method, "family": family,
+           "mesh": mesh_name, "clients": clients,
+           "local_steps": local_steps, "batch": batch}
+    if family == "lm" and method == "fedma":
+        rec.update(status="skipped",
+                   reason="matched averaging is defined for non-grouped "
+                          "CNNs (core/matching.py); no LM analog")
+        _write(outdir, tag, rec)
+        if verbose:
+            print(f"[skip] {tag}: {rec['reason']}")
+        return rec
+    try:
+        kind = "host" if mesh_name == "1x1" else "pod"
+        task, arch = (_cnn_case(method, kind) if family == "cnn"
+                      else _lm_case(method))
+        fl = FLConfig(n_nodes=clients, method=method)
+        t0 = time.time()
+        lowered = lower_round(task, fl, mesh, _batch_elems(family, batch,
+                                                           seq),
+                              local_steps=local_steps)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        colls = collective_bytes(compiled.as_text())
+        rec.update(
+            status="ok", arch=arch,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory={"temp_bytes": mem.temp_size_in_bytes,
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes},
+            collectives=colls,
+            host_matching=(method == "fedma"),
+            host_gather_bytes=(stacked_param_bytes(task, clients)
+                               if method == "fedma" else 0))
+        if verbose:
+            busy = {k: round(v["bytes"] / 2**20, 1)
+                    for k, v in colls.items() if v["count"]}
+            print(f"[ok]   {tag}: lower {t_lower:.1f}s compile "
+                  f"{t_compile:.1f}s collectives(MiB) {busy}"
+                  + (f" host_gather {rec['host_gather_bytes']/2**20:.1f}MiB"
+                     if method == "fedma" else ""))
+    except Exception as e:  # noqa: BLE001 — record, keep the matrix going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    _write(outdir, tag, rec)
+    return rec
+
+
+def _write(outdir, tag, rec):
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, f"dryrun_{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+DEFAULT_OUT = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..",
+    "benchmarks", "artifacts_perf"))      # cwd-independent, like flbench
+
+
+def run_matrix(*, mesh_kind: str = "pod", methods=METHODS,
+               families=FAMILIES, clients: int = 16, local_steps: int = 4,
+               batch: int = 32, seq: int = 64, outdir: str = DEFAULT_OUT,
+               verbose: bool = True) -> list:
+    bad = [m for m in methods if m not in METHODS] + \
+          [f for f in families if f not in FAMILIES]
+    if bad:
+        raise ValueError(f"unknown method/family: {bad}; "
+                         f"methods={METHODS} families={FAMILIES}")
+    if mesh_kind == "host":
+        mesh, mesh_name = make_host_mesh(), "1x1"
+    elif mesh_kind == "pod":
+        mesh, mesh_name = make_production_mesh(), "16x16"
+    else:
+        raise ValueError(f"unknown mesh_kind: {mesh_kind!r} "
+                         "(expected 'pod' or 'host')")
+    return [run_one(m, f, mesh, mesh_name, clients=clients,
+                    local_steps=local_steps, batch=batch, seq=seq,
+                    outdir=outdir, verbose=verbose)
+            for f in families for m in methods]
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "host"])
+    ap.add_argument("--methods", default="all",
+                    help="comma list of fedavg,fedprox,fed2,fedma or 'all'")
+    ap.add_argument("--families", default="all",
+                    help="comma list of cnn,lm or 'all'")
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--out", default="benchmarks/artifacts_perf")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
 
-    cfg = vgg9.full(fed2_groups=10, decouple=6, norm="gn")
-    mesh = make_production_mesh()
-    opt = sgd(0.01, 0.9)
-
-    def fl_round(stacked, batches):
-        def one_client(params, client_batches):
-            state = opt.init(params)
-
-            def step(carry, batch):
-                p, s, i = carry
-                g = jax.grad(cnn_loss)(p, cfg, batch)
-                p, s = opt.update(g, s, p, i)
-                return (p, s, i + 1), None
-
-            (params, _, _), _ = jax.lax.scan(
-                step, (params, state, jnp.zeros((), jnp.int32)),
-                client_batches)
-            return params
-
-        stacked = jax.vmap(one_client)(stacked, batches)
-        ga = fusion_lib.cnn_group_axes(
-            jax.tree_util.tree_map(lambda a: a[0], stacked), cfg)
-        stacked_ga = jax.tree_util.tree_map(
-            lambda x: x, ga,
-            is_leaf=lambda x: x is None or isinstance(x,
-                                                      fusion_lib.GroupAxis))
-        return fusion_lib.paired_average(stacked, stacked_ga)
-
-    params = jax.eval_shape(lambda k: init_cnn(k, cfg),
-                            jax.random.PRNGKey(0))
-    n = args.clients
-
-    def shard_like(leaf):
-        return jax.ShapeDtypeStruct(
-            (n,) + leaf.shape, leaf.dtype,
-            sharding=NamedSharding(mesh, P("data",
-                                           *([None] * len(leaf.shape)))))
-
-    stacked_specs = jax.tree_util.tree_map(shard_like, params)
-    batch_specs = {
-        "images": jax.ShapeDtypeStruct(
-            (n, args.local_steps, args.batch, 32, 32, 3), jnp.float32,
-            sharding=NamedSharding(mesh, P("data", None, None, None, None,
-                                           None))),
-        "labels": jax.ShapeDtypeStruct(
-            (n, args.local_steps, args.batch), jnp.int32,
-            sharding=NamedSharding(mesh, P("data", None, None))),
-    }
-    with jax.set_mesh(mesh):
-        lowered = jax.jit(fl_round).lower(stacked_specs, batch_specs)
-        compiled = lowered.compile()
-    mem = compiled.memory_analysis()
-    colls = collective_bytes(compiled.as_text())
-    rec = {"status": "ok", "kind": "fl_round_fed2", "arch": "vgg9-fed2",
-           "mesh": "16x16", "clients": n,
-           "memory": {"temp_bytes": mem.temp_size_in_bytes,
-                      "argument_bytes": mem.argument_size_in_bytes},
-           "collectives": colls}
-    os.makedirs(args.out, exist_ok=True)
-    with open(os.path.join(args.out, "dryrun_fl_round_16x16.json"),
-              "w") as f:
-        json.dump(rec, f, indent=1)
-    print("fl_round lowered+compiled:",
-          f"temp {mem.temp_size_in_bytes / 2**30:.2f} GiB;",
-          {k: round(v["bytes"] / 2**20, 1)
-           for k, v in colls.items() if v["count"]})
+    methods = METHODS if args.methods == "all" \
+        else tuple(args.methods.split(","))
+    families = FAMILIES if args.families == "all" \
+        else tuple(args.families.split(","))
+    recs = run_matrix(mesh_kind=args.mesh, methods=methods,
+                      families=families, clients=args.clients,
+                      local_steps=args.local_steps, batch=args.batch,
+                      seq=args.seq, outdir=args.out)
+    n_fail = sum(r["status"] == "error" for r in recs)
+    print(f"done; {len(recs)} records, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
 
 
 if __name__ == "__main__":

@@ -66,6 +66,19 @@ def run_fl(args):
                                       make_image_dataset, nxc_partition)
     from repro.fl.runtime import FLConfig, cnn_task, run_federated
 
+    if args.dry_run:
+        # lower (don't run) one engine round on the 1-device host mesh —
+        # the sharded code path without TPUs. Uses fl_dryrun's reduced
+        # vgg9 case regardless of --arch; see repro.launch.fl_dryrun for
+        # the production-mesh matrix.
+        from repro.launch.fl_dryrun import run_matrix
+        recs = run_matrix(mesh_kind="host", methods=(args.method,),
+                          families=("cnn",), clients=args.nodes,
+                          local_steps=args.local_epochs *
+                          args.steps_per_epoch,
+                          batch=args.batch)
+        return recs
+
     mod = importlib.import_module(
         f"repro.configs.{args.arch.replace('-', '_').replace('.', '_')}")
     if args.method == "fed2":
@@ -127,7 +140,13 @@ def main():
     ap.add_argument("--noise", type=float, default=1.2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="fl mode: lower+compile one engine round (reduced "
+                         "vgg9, chosen --method) on the host mesh instead "
+                         "of training")
     args = ap.parse_args()
+    if args.dry_run and args.mode != "fl":
+        ap.error("--dry-run is only supported with --mode fl")
     (run_lm if args.mode == "lm" else run_fl)(args)
 
 

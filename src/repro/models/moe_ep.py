@@ -28,11 +28,11 @@ from repro.models import moe as moe_lib
 from repro.models.layers import dense_apply, silu
 
 
-def _local_moe(p, xf, cfg, axis: str | None, capacity: int):
-    """Body run per shard. xf: (n_loc, d) local tokens."""
+def _local_moe(p, xf, cfg, axis: str | None, capacity: int, nsh: int = 1):
+    """Body run per shard. xf: (n_loc, d) local tokens. nsh: the static
+    size of ``axis`` (shapes depend on it; mesh-known at trace time)."""
     n_loc, d = xf.shape
     e, k = cfg.n_experts, cfg.top_k
-    nsh = jax.lax.axis_size(axis) if axis else 1
     e_loc = e // nsh
 
     weights, ids, aux = moe_lib.route(dense_apply(p["router"], xf), cfg)
@@ -128,17 +128,22 @@ def moe_apply_ep(p, x, cfg, mesh, *, axis: str = "model",
     cf = capacity_factor or cfg.capacity_factor
     capacity = max(1, int(cf * cfg.top_k * n_loc / nsh))
 
-    from jax import shard_map
+    try:                                    # jax >= 0.6
+        from jax import shard_map
+        check_kw = {"check_vma": False}
+    except ImportError:                     # jax 0.4.x
+        from jax.experimental.shard_map import shard_map
+        check_kw = {"check_rep": False}
 
     def body(p_loc, x_loc):
         bl, sl, _ = x_loc.shape
         y, aux = _local_moe(p_loc, x_loc.reshape(bl * sl, d), cfg,
-                            axis if nsh > 1 else None, capacity)
+                            axis if nsh > 1 else None, capacity, nsh=nsh)
         return y.reshape(bl, sl, d), aux
 
     pspecs = jax.tree_util.tree_map(lambda _: P(), p)  # replicated weights
     fn = shard_map(body, mesh=mesh,
                    in_specs=(pspecs, P("data", None, None)),
                    out_specs=(P("data", None, None), P()),
-                   check_vma=False)
+                   **check_kw)
     return fn(p, x)

@@ -19,7 +19,7 @@ def test_ep_matches_dense_single_device():
     p = M.moe_init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    with jax.set_mesh(mesh):
+    with mesh:
         y1, _ = moe_apply_ep(p, x, cfg, mesh)
     y2, _ = M.moe_apply_dense_reference(p, x, cfg)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
@@ -37,7 +37,7 @@ cfg = dataclasses.replace(get_config("mixtral-8x22b", reduced=True).moe,
 p = M.moe_init(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
 mesh = jax.make_mesh((2, 4), ("data", "model"))
-with jax.set_mesh(mesh):
+with mesh:
     y1, _ = moe_apply_ep(p, x, cfg, mesh)
 y2, _ = M.moe_apply_dense_reference(p, x, cfg)
 err = float(jnp.max(jnp.abs(y1 - y2)))
