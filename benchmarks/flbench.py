@@ -19,6 +19,7 @@ import numpy as np
 from repro.configs import vgg9, vgg16, mobilenet
 from repro.data.synthetic import (dirichlet_partition, make_image_dataset,
                                   nxc_partition)
+from repro.fl import methods as methods_lib
 from repro.fl.runtime import FLConfig, cnn_task, run_federated
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
@@ -52,9 +53,11 @@ _BENCH_PLANS = {
 
 
 def model_cfg(arch: str, method: str, *, groups=5, decouple=2, norm=None):
+    """Group-structured net for group-structured methods (registry
+    capability flag), plain baseline net otherwise."""
     from repro.models.cnn import CNNConfig
     plan, fc = _BENCH_PLANS[arch]
-    if method == "fed2":
+    if methods_lib.get(method).uses_groups:
         return CNNConfig(arch_id=f"{arch}-bench", plan=plan, fc_dims=fc,
                          n_classes=N_CLASSES, fed2_groups=groups,
                          decouple=decouple, norm=norm or "gn")
@@ -91,7 +94,7 @@ def run_case(name: str, method: str, *, arch="vgg9", nodes=6, cpn=None,
     # logit scales. Kept available for the high-skew regimes where it was
     # designed (EXPERIMENTS.md §Boundary).
     class_counts, spec = None, None
-    if method == "fed2" and cfg.fed2_groups and \
+    if methods_lib.get(method).uses_groups and cfg.fed2_groups and \
             os.environ.get("REPRO_FED2_PRESENCE", "0") == "1":
         from repro.core.grouping import GroupSpec
         spec = GroupSpec.contiguous(cfg.fed2_groups, N_CLASSES)
@@ -124,6 +127,24 @@ def csv_line(rec, extra=""):
 ARTIFACTS_PERF = os.path.join(os.path.dirname(__file__), "artifacts_perf")
 
 
+def _engine_fixture(nodes, steps_per_epoch, batch):
+    """Shared setup for the engine benchmarks: partition, packed batch
+    set (fixed rng), and max-1-floored sample weights."""
+    from repro.fl.runtime import _pack_client_batches
+
+    ds, _ = dataset()
+    parts = nxc_partition(ds.labels, nodes, 5, N_CLASSES, seed=0)
+
+    def get_batch(sel):
+        return {"images": jnp.asarray(ds.images[sel]),
+                "labels": jnp.asarray(ds.labels[sel])}
+
+    batches = _pack_client_batches(parts, get_batch, steps_per_epoch,
+                                   batch, np.random.default_rng(0))
+    weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
+    return batches, weights
+
+
 def bench_engine(*, nodes=4, rounds=None, steps_per_epoch=6,
                  batch=16) -> dict:
     """Steady-state rounds/sec: the fused round engine (one jitted round,
@@ -133,33 +154,24 @@ def bench_engine(*, nodes=4, rounds=None, steps_per_epoch=6,
     import jax
     from repro.core import fusion as fusion_lib
     from repro.fl.engine import make_local_phase, make_round_engine
-    from repro.fl.runtime import _pack_client_batches
     from repro.optim.optimizers import sgd
 
     rounds = rounds or (6 if QUICK else 14)
-    ds, _ = dataset()
-    parts = nxc_partition(ds.labels, nodes, 5, N_CLASSES, seed=0)
-
-    def get_batch(sel):
-        return {"images": jnp.asarray(ds.images[sel]),
-                "labels": jnp.asarray(ds.labels[sel])}
-
+    batches, weights = _engine_fixture(nodes, steps_per_epoch, batch)
     cfg = model_cfg("vgg9", "fed2")
     fl = FLConfig(n_nodes=nodes, rounds=rounds, local_epochs=1,
                   steps_per_epoch=steps_per_epoch, batch_size=batch,
                   lr=0.008, momentum=0.9, method="fed2", seed=0)
     task = cnn_task(cfg)
-    weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
     gp0 = task.init_fn(jax.random.PRNGKey(0))
-    batches = _pack_client_batches(parts, get_batch, steps_per_epoch,
-                                   batch, np.random.default_rng(0))
 
     engine = make_round_engine(task, fl, gp0, weights=weights)
-    jax.block_until_ready(engine.run_round(gp0, batches))     # compile
+    state0 = engine.init_state(gp0)
+    jax.block_until_ready(engine.run_round(state0, gp0, batches))  # compile
     t0 = time.time()
-    g_e = gp0
+    st, g_e = state0, gp0
     for _ in range(rounds):
-        g_e = engine.run_round(g_e, batches)
+        st, g_e = engine.run_round(st, g_e, batches)
     jax.block_until_ready(g_e)
     engine_s = time.time() - t0
 
@@ -196,12 +208,52 @@ def bench_engine(*, nodes=4, rounds=None, steps_per_epoch=6,
     return rec
 
 
+def bench_methods(*, nodes=4, rounds=None, steps_per_epoch=4,
+                  batch=16) -> list:
+    """Steady-state rounds/sec for EVERY registered method (the registry
+    is the enumeration — a newly registered strategy shows up here with no
+    benchmark change), same data/partition/net family per method."""
+    import jax
+    from repro.fl.engine import make_round_engine
+
+    rounds = rounds or (4 if QUICK else 10)
+    batches, weights = _engine_fixture(nodes, steps_per_epoch, batch)
+    recs = []
+    for method in methods_lib.available():
+        cfg = model_cfg("vgg9", method)
+        fl = FLConfig(n_nodes=nodes, rounds=rounds, local_epochs=1,
+                      steps_per_epoch=steps_per_epoch, batch_size=batch,
+                      lr=0.008, momentum=0.9, method=method, seed=0)
+        task = cnn_task(cfg)
+        gp = task.init_fn(jax.random.PRNGKey(0))
+        engine = make_round_engine(task, fl, gp, weights=weights)
+        state = engine.init_state(gp)
+        state, gp = engine.run_round(state, gp, batches)   # compile
+        jax.block_until_ready(gp)
+        t0 = time.time()
+        for _ in range(rounds):
+            state, gp = engine.run_round(state, gp, batches)
+        jax.block_until_ready(gp)
+        dt = time.time() - t0
+        recs.append({"method": method, "rounds": rounds,
+                     "rounds_per_s": round(rounds / dt, 3),
+                     "us_per_round": round(1e6 * dt / rounds)})
+    os.makedirs(ARTIFACTS_PERF, exist_ok=True)
+    with open(os.path.join(ARTIFACTS_PERF, "flbench_methods.json"),
+              "w") as f:
+        json.dump(recs, f, indent=1)
+    return recs
+
+
 def main():
     rec = bench_engine()
     us = 1e6 * rec["engine_s"] / rec["rounds"]
     print(f"fl_engine_round,{us:.0f},"
           f"speedup_vs_seed_loop={rec['speedup']:.2f}x,"
           f"params_match={rec['params_match']}")
+    for r in bench_methods():
+        print(f"fl_method_{r['method']},{r['us_per_round']},"
+              f"rounds_per_s={r['rounds_per_s']}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """End-to-end driver for the paper's scenario: federated image
-classification under non-IID skew, Fed2 vs FedAvg vs FedProx vs FedMA.
+classification under non-IID skew, Fed2 vs any set of registered methods
+(fl/methods.py — ``--methods all`` runs the whole registry).
 
   PYTHONPATH=src python examples/fed2_cifar_fl.py [--rounds 10] [--nodes 6]
+  PYTHONPATH=src python examples/fed2_cifar_fl.py --methods all
 """
 import argparse
 
@@ -9,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs import vgg9
 from repro.data.synthetic import make_image_dataset, nxc_partition
+from repro.fl import methods as methods_lib
 from repro.fl.runtime import FLConfig, cnn_task, run_federated
 
 
@@ -18,7 +21,9 @@ def main():
     ap.add_argument("--nodes", type=int, default=6)
     ap.add_argument("--classes-per-node", type=int, default=5)
     ap.add_argument("--noise", type=float, default=1.6)
-    ap.add_argument("--methods", default="fedavg,fed2")
+    ap.add_argument("--methods", default="fedavg,fed2",
+                    help="comma list from "
+                         f"{','.join(methods_lib.available())}, or 'all'")
     args = ap.parse_args()
 
     ds = make_image_dataset(3000, n_classes=10, seed=0, noise=args.noise)
@@ -34,9 +39,11 @@ def main():
                      "labels": jnp.asarray(test.labels)}]
 
     results = {}
-    for method in args.methods.split(","):
+    chosen = (methods_lib.available() if args.methods == "all"
+              else args.methods.split(","))
+    for method in chosen:
         cfg = (vgg9.reduced(fed2_groups=5, decouple=3, norm="gn")
-               if method == "fed2" else
+               if methods_lib.get(method).uses_groups else
                vgg9.reduced(fed2_groups=0, norm="none"))
         fl = FLConfig(n_nodes=args.nodes, rounds=args.rounds,
                       local_epochs=1, steps_per_epoch=6, batch_size=16,

@@ -15,6 +15,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.common import with_fed2
 from repro.data.synthetic import make_token_dataset
+from repro.fl import methods as methods_lib
 from repro.fl.runtime import FLConfig, lm_task, run_federated
 
 
@@ -24,7 +25,11 @@ def main():
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--fed2", action="store_true", default=True)
+    ap.add_argument("--methods", default="fedavg,fed2",
+                    help="comma list from "
+                         f"{','.join(methods_lib.available())}, or 'all' "
+                         "(host-fusion methods need a CNN task and are "
+                         "skipped for the LM)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -48,7 +53,13 @@ def main():
                      "labels": jnp.asarray(test_toks[:, 1:]),
                      "mask": jnp.ones((64, args.seq), jnp.float32)}]
 
-    for method in ["fedavg", "fed2"]:
+    chosen = (methods_lib.available() if args.methods == "all"
+              else args.methods.split(","))
+    for method in chosen:
+        if methods_lib.get(method).host_fusion:
+            print(f"{method}: skipped (host matched averaging is defined "
+                  "for non-grouped CNNs; no LM analog)")
+            continue
         fl = FLConfig(n_nodes=args.nodes, rounds=args.rounds,
                       local_epochs=1, steps_per_epoch=4, batch_size=8,
                       lr=0.01, momentum=0.9, method=method, seed=0)

@@ -1,6 +1,6 @@
 """Deterministic synthetic datasets + federated partitioners.
 
-CIFAR-10/100 are not available offline (DESIGN.md §7.1): we generate a
+CIFAR-10/100 are not available offline (DESIGN.md §8.1): we generate a
 class-clustered image dataset whose difficulty knobs (prototype separation,
 noise, intra-class variation) make FedAvg-vs-Fed2 orderings measurable at
 laptop scale. Images are class prototypes (low-frequency random patterns)

@@ -1,10 +1,11 @@
-"""Sharded federated round engine (DESIGN.md §5).
+"""Sharded federated round engine (DESIGN.md §5, method hooks §6).
 
 ONE jit-compiled function runs a full federated round:
 
     stacked <- broadcast(global)             # round start
-    stacked <- vmap(local_sgd)(stacked, client_batches)
-    global  <- fuse(stacked)                 # fedavg | fed2 paired | ...
+    stacked, cstate <- vmap(method.client_update)(stacked, batches, cstate)
+    fused   <- method.fuse(stacked)          # the only cross-client op
+    sstate, global <- method.server_update(sstate, fused)
 
 parameterized by *placement*:
 
@@ -15,18 +16,18 @@ parameterized by *placement*:
                     pre-alignment means paired averaging (Eq. 19) costs
                     exactly FedAvg's collective, with zero matching step.
 
-Method handling inside the single jitted round:
+and by *method*: a ``FedMethod`` strategy (fl/methods.py) resolved from the
+registry via ``methods.get(cfg.method)``. The engine never branches on the
+method name — each method declares its hooks (client update, device fuse,
+optional host fuse, server step) and its persistent state:
 
-  fedavg / fedprox  coordinate mean (Eq. 1/18); fedprox adds the proximal
-                    term to the local loss only.
-  fed2              feature paired averaging (Eq. 19) over the group-axis
-                    tree, optionally presence-weighted (non-IID).
-  fedma             the round function returns the STACKED client params;
-                    Hungarian matching (core/matching.py) runs on the host
-                    between rounds. That host gather + per-round matching
-                    cost is precisely the overhead the paper's structural
-                    alignment removes — the engine makes the asymmetry
-                    measurable (see launch/fl_dryrun.py records).
+    state = {"server": <method server tree>, "clients": <stacked (N, ...)>}
+    state, new_global = round_fn(state, global_params, batches)
+
+``host_fusion`` methods (fedma) end the device program at the stacked
+client params; ``method.host_fuse`` completes the round on the host (that
+host gather + per-round matching cost is precisely the overhead the
+paper's structural alignment removes — see launch/fl_dryrun.py records).
 
 ``lower_round`` lowers the same round function against ShapeDtypeStructs
 (no arrays allocated) for dry-run compilation on any mesh — the basis of
@@ -43,7 +44,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import fusion as fusion_lib
-from repro.optim.optimizers import Optimizer, sgd
+from repro.fl import methods as methods_lib
+from repro.fl.methods import FedMethod, MethodContext
+from repro.optim.optimizers import Optimizer
 
 PyTree = Any
 
@@ -53,28 +56,39 @@ def _client_sharding(mesh, ndim: int) -> NamedSharding:
     return NamedSharding(mesh, P("data", *([None] * (ndim - 1))))
 
 
-def make_local_phase(task, cfg, opt: Optimizer) -> Callable:
-    """(stacked, batches, global_params) -> stacked after the local phase:
-    one scan over local steps per client, vmapped over the client axis."""
+def resolve_use_kernel(use_kernel: bool | None, mesh) -> bool:
+    """The engine's effective fusion fast-path decision — THE single copy
+    of the rule (consumers recording it, e.g. launch/fl_dryrun.py, call
+    this instead of re-deriving it): caller's choice (None = the
+    env-driven ``fusion.default_use_kernel()``), forced off on
+    multi-device meshes where the tree reduction is the path that lowers
+    to one all-reduce."""
+    if use_kernel is None:
+        use_kernel = fusion_lib.default_use_kernel()
+    return bool(use_kernel) and (mesh is None or mesh.size == 1)
 
-    def local_loss(params, batch, global_params):
-        loss = task.loss_fn(params, batch)
-        if cfg.method == "fedprox":
-            loss = loss + fusion_lib.fedprox_penalty(params, global_params,
-                                                     cfg.prox_mu)
-        return loss
+
+def make_local_phase(task, cfg, opt: Optimizer,
+                     method: FedMethod | None = None) -> Callable:
+    """(stacked, batches, global_params) -> stacked after the local phase:
+    the method's stateless client_update vmapped over the client axis (the
+    decomposed reference for tests/benchmarks; stateful methods run their
+    client state through the engine's round_fn instead)."""
+    meth = method if method is not None else methods_lib.get(cfg.method)
+    if meth.client_stateful:
+        raise ValueError(
+            f"{meth.name} threads per-client state through its local "
+            "phase; use make_round_engine (round_fn carries the state) "
+            "instead of the stateless make_local_phase reference")
+    ctx = MethodContext(task=task, cfg=cfg, n_nodes=cfg.n_nodes,
+                        local_steps=cfg.local_epochs * cfg.steps_per_epoch,
+                        opt=opt, weights=None, raw_weights=None,
+                        group_axes=None, group_weights=None,
+                        use_kernel=False)
 
     def one_client(params, batches, global_params):
-        state = opt.init(params)
-
-        def step(carry, batch):
-            p, s, i = carry
-            g = jax.grad(local_loss)(p, batch, global_params)
-            p, s = opt.update(g, s, p, i)
-            return (p, s, i + 1), None
-
-        (params, _, _), _ = jax.lax.scan(
-            step, (params, state, jnp.zeros((), jnp.int32)), batches)
+        params, _ = meth.client_update(params, batches, global_params,
+                                       (), (), ctx)
         return params
 
     def local_phase(stacked, batches, global_params):
@@ -88,76 +102,107 @@ def make_local_phase(task, cfg, opt: Optimizer) -> Callable:
 class RoundEngine:
     """One federated round as one compiled function.
 
-    round_fn(global_params, batches) returns the new global params — except
-    for fedma, where it returns the stacked client params and ``host_fuse``
-    completes the round on the host (matching is not a device program)."""
+    run_round threads the method's persistent state (``init_state`` builds
+    round-0 state from the global params):
+
+        state, new_global = engine.run_round(state, global_params, batches)
+
+    For host_fusion methods (fedma) the device round_fn returns the
+    stacked client params and ``host_fuse`` completes the round on the
+    host (matching is not a device program)."""
     n_nodes: int
     mesh: Any
+    method: FedMethod
     round_fn: Callable
     eval_fn: Callable
+    init_state: Callable
     host_fuse: Callable | None = None
 
-    def run_round(self, global_params: PyTree, batches: PyTree) -> PyTree:
-        out = self.round_fn(global_params, batches)
+    def run_round(self, state: PyTree, global_params: PyTree,
+                  batches: PyTree) -> tuple:
+        state, out = self.round_fn(state, global_params, batches)
         if self.host_fuse is not None:
             out = self.host_fuse(out)
-        return out
+        return state, out
 
 
 def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
                       weights=None, group_weights=None,
-                      use_kernel: bool | None = None) -> RoundEngine:
-    """Build the engine for (task, cfg).
+                      use_kernel: bool | None = None,
+                      method: FedMethod | None = None) -> RoundEngine:
+    """Build the engine for (task, cfg, method).
 
     params_like: a params pytree or its eval_shape — only the tree structure
     and leaf shapes are read (to derive the group-axis tree).
     weights: per-client sample weights (N,), fixed for the run.
     group_weights: (N, G) presence weights for fed2's non-IID refinement.
     use_kernel: route fusion through the Pallas flatten-to-(N, M) fast path;
-    default (None) = ``fusion.default_use_kernel()``. Forced off under a
-    mesh, where the tree reduction is the path that lowers to one
-    all-reduce (the kernel fast path is a single-host optimization)."""
-    if cfg.method not in ("fedavg", "fedprox", "fed2", "fedma"):
-        raise ValueError(f"unknown fusion method: {cfg.method!r}")
-    opt = sgd(cfg.lr, cfg.momentum)
-    local_phase = make_local_phase(task, cfg, opt)
+    default (None) = ``fusion.default_use_kernel()``. Forced off on
+    multi-device meshes, where the tree reduction is the path that lowers
+    to one all-reduce (the kernel fast path is a single-host optimization;
+    a 1-device mesh keeps the caller's choice so single-host dry-run
+    records reflect the kernel path).
+    method: an explicit FedMethod instance; default resolves
+    ``methods.get(cfg.method)`` from the registry."""
+    meth = method if method is not None else methods_lib.get(cfg.method)
+    if meth.host_fusion and (
+            type(meth).init_server_state is not FedMethod.init_server_state
+            or type(meth).server_update is not FedMethod.server_update):
+        raise ValueError(
+            f"{meth.name}: host_fusion methods end the device round at the "
+            "stacked params — server_update/init_server_state never run; "
+            "fold server-side work into host_fuse instead")
+    opt = meth.local_opt(cfg)
     n = cfg.n_nodes
-    if use_kernel is None:
-        use_kernel = fusion_lib.default_use_kernel()
-    use_kernel = use_kernel and mesh is None
+    use_kernel = resolve_use_kernel(use_kernel, mesh)
     w = None if weights is None else jnp.asarray(weights, jnp.float32)
     gw = None if group_weights is None else jnp.asarray(group_weights,
                                                         jnp.float32)
     ga = None
-    if cfg.method == "fed2":
-        if task.group_axes_fn is None:
-            raise ValueError("fed2 requires task.group_axes_fn")
+    if meth.uses_groups and task.group_axes_fn is not None:
         ga = task.group_axes_fn(params_like)
+    ctx = MethodContext(task=task, cfg=cfg, n_nodes=n,
+                        local_steps=cfg.local_epochs * cfg.steps_per_epoch,
+                        opt=opt, weights=w, raw_weights=weights,
+                        group_axes=ga, group_weights=gw,
+                        use_kernel=use_kernel)
+    meth.check(ctx)
 
-    def round_fn(global_params, batches):
+    def init_state(global_params):
+        server = meth.init_server_state(global_params, ctx)
+        one = meth.init_client_state(global_params, ctx)
+        clients = fusion_lib.broadcast_global(one, n)
+        return {"server": server, "clients": clients}
+
+    def round_fn(state, global_params, batches):
         stacked = fusion_lib.broadcast_global(global_params, n)
         if mesh is not None:
-            stacked = jax.lax.with_sharding_constraint(
-                stacked, jax.tree_util.tree_map(
-                    lambda l: _client_sharding(mesh, l.ndim), stacked))
-        stacked = local_phase(stacked, batches, global_params)
-        if cfg.method == "fed2":
-            return fusion_lib.paired_average(stacked, ga, weights=w,
-                                             group_weights=gw,
-                                             use_kernel=use_kernel)
-        if cfg.method == "fedma":
-            return stacked          # fused on the host (see class docstring)
-        return fusion_lib.fedavg(stacked, w, use_kernel=use_kernel)
+            constrain = lambda t: jax.lax.with_sharding_constraint(  # noqa: E731
+                t, jax.tree_util.tree_map(
+                    lambda l: _client_sharding(mesh, l.ndim), t))
+            stacked = constrain(stacked)
+            state = dict(state, clients=constrain(state["clients"]))
+        stacked, new_clients = jax.vmap(
+            lambda p, b, cs: meth.client_update(
+                p, b, global_params, cs, state["server"], ctx),
+            in_axes=(0, 0, 0))(stacked, batches, state["clients"])
+        fused = meth.fuse(stacked, global_params, ctx)
+        if meth.host_fusion:
+            return {"server": state["server"],
+                    "clients": new_clients}, fused
+        new_server, new_global = meth.server_update(
+            state["server"], state["clients"], new_clients, global_params,
+            fused, ctx)
+        return {"server": new_server, "clients": new_clients}, new_global
 
     host_fuse = None
-    if cfg.method == "fedma":
-        if task.matched_average_fn is None:
-            raise ValueError("fedma requires task.matched_average_fn "
-                             "(defined for non-grouped CNNs)")
-        host_fuse = lambda stacked: task.matched_average_fn(stacked, weights)  # noqa: E731
+    if meth.host_fusion:
+        host_fuse = lambda out: meth.host_fuse(out, ctx)  # noqa: E731
 
-    return RoundEngine(n_nodes=n, mesh=mesh, round_fn=jax.jit(round_fn),
-                       eval_fn=jax.jit(task.eval_fn), host_fuse=host_fuse)
+    return RoundEngine(n_nodes=n, mesh=mesh, method=meth,
+                       round_fn=jax.jit(round_fn),
+                       eval_fn=jax.jit(task.eval_fn),
+                       init_state=init_state, host_fuse=host_fuse)
 
 
 # ---------------------------------------------------------------------------
@@ -165,22 +210,41 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
 # ---------------------------------------------------------------------------
 
 
-def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int):
+def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int,
+                use_kernel: bool | None = None):
     """Lower one full round on ``mesh`` from ShapeDtypeStructs.
 
     batch_elems: per-sample batch element specs WITHOUT the leading
     (clients, steps) axes, e.g. ``{"images": ((B, 32, 32, 3), jnp.float32),
-    "labels": ((B,), jnp.int32)}``. Returns the jax ``Lowered`` for
-    ``round_fn(global_specs, batch_specs)``.
+    "labels": ((B,), jnp.int32)}``. use_kernel threads the caller's fusion
+    fast-path choice to the engine (multi-device meshes still force it
+    off). cfg's own step-count fields are overridden so that
+    ``ctx.local_steps`` — which method numerics read (scaffold's K*lr,
+    fednova's tau) — equals the ``local_steps`` the lowered round scans.
+    Returns the jax ``Lowered`` for
+    ``round_fn(state_specs, global_specs, batch_specs)``.
     """
+    cfg = dataclasses.replace(cfg, local_epochs=1,
+                              steps_per_epoch=local_steps)
     n = cfg.n_nodes
     param_shapes = jax.eval_shape(task.init_fn, jax.random.PRNGKey(0))
     engine = make_round_engine(task, cfg, param_shapes, mesh=mesh,
-                               use_kernel=False)
+                               use_kernel=use_kernel)
+
+    def spec(l, sharding):
+        return jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=sharding)
+
     gspecs = jax.tree_util.tree_map(
-        lambda l: jax.ShapeDtypeStruct(
-            l.shape, l.dtype, sharding=NamedSharding(mesh, P())),
-        param_shapes)
+        lambda l: spec(l, NamedSharding(mesh, P())), param_shapes)
+    state_shapes = jax.eval_shape(engine.init_state, param_shapes)
+    sspecs = {
+        "server": jax.tree_util.tree_map(
+            lambda l: spec(l, NamedSharding(mesh, P())),
+            state_shapes["server"]),
+        "clients": jax.tree_util.tree_map(
+            lambda l: spec(l, _client_sharding(mesh, l.ndim)),
+            state_shapes["clients"]),
+    }
     bspecs = {
         name: jax.ShapeDtypeStruct(
             (n, local_steps) + tuple(shape), dtype,
@@ -188,7 +252,7 @@ def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int):
         for name, (shape, dtype) in batch_elems.items()
     }
     with mesh:      # jax 0.4.x: Mesh is the context manager
-        return engine.round_fn.lower(gspecs, bspecs)
+        return engine.round_fn.lower(sspecs, gspecs, bspecs)
 
 
 def stacked_param_bytes(task, n_clients: int) -> int:

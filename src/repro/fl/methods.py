@@ -1,0 +1,373 @@
+"""Federated method strategy API (DESIGN.md §6).
+
+A federated method is a `FedMethod` subclass registered by name. The round
+engine (fl/engine.py) is method-agnostic: it composes the method's hooks
+into ONE jitted round and threads the method's persistent state
+(server-side trees plus per-client stacked trees) across rounds:
+
+    state, new_global = round_fn(state, global_params, batches)
+
+Hook order inside a round (DESIGN.md §6):
+
+    init_server_state / init_client_state   once, before round 0
+    client_update                           local phase (default: scan of
+                                            local SGD steps adding
+                                            local_loss_term), vmapped over
+                                            the client axis; per-client
+                                            state in and out
+    fuse                                    device-side aggregation
+    server_update                           server-state step -> global
+    host_fuse                               host_fusion methods only
+                                            (fedma): completes the round
+                                            on the host
+
+`fedavg` is the all-defaults method; every other method overrides the
+smallest possible hook set: `fedprox` only `local_loss_term`, `fed2` only
+`fuse` (paired averaging, Eq. 19), `fedma` only `fuse`/`host_fuse`,
+`scaffold` `client_update` + server control-variate state, `fednova` only
+`fuse`, `fedavgm`/`fedadam` only `server_update`.
+
+Consumers enumerate `available()` instead of hard-coding method lists, and
+resolve instances with `get(name)` — there are no string branches on
+`cfg.method` anywhere in src/ (pinned by tests/test_methods.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion as fusion_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodContext:
+    """Per-run context handed to every hook (built by make_round_engine).
+
+    weights: normalized-dtype (float32 jnp) per-client sample weights or
+    None; raw_weights keeps the caller's array (host_fuse consumers like
+    fedma's matched averaging expect it untouched).
+    group_axes: the task's GroupAxis tree (only when uses_groups).
+    """
+    task: Any
+    cfg: Any
+    n_nodes: int
+    local_steps: int
+    opt: Any
+    weights: jnp.ndarray | None
+    raw_weights: Any
+    group_axes: PyTree | None
+    group_weights: jnp.ndarray | None
+    use_kernel: bool
+
+
+class FedMethod:
+    """Strategy base class; defaults compose to exactly FedAvg (Eq. 1)."""
+
+    name: str = ""
+    summary: str = ""          # one line for the README method table
+    uses_groups = False        # needs task.group_axes_fn (structural groups)
+    host_fusion = False        # fuse completes on the host (fedma)
+    client_stateful = False    # client_update reads per-client state
+
+    def local_opt(self, cfg):
+        """The optimizer driving the local phase. Default: the config's
+        SGD(+momentum); methods whose analysis assumes a specific local
+        optimizer (scaffold) override."""
+        from repro.optim.optimizers import sgd
+        return sgd(cfg.lr, cfg.momentum)
+
+    # -- validation ---------------------------------------------------------
+
+    def check(self, ctx: MethodContext) -> None:
+        """Raise ValueError when the task lacks what the method needs."""
+        if self.uses_groups and ctx.task.group_axes_fn is None:
+            raise ValueError(f"{self.name} requires task.group_axes_fn")
+
+    # -- persistent state ---------------------------------------------------
+
+    def init_server_state(self, params: PyTree, ctx: MethodContext) -> PyTree:
+        return ()
+
+    def init_client_state(self, params: PyTree, ctx: MethodContext) -> PyTree:
+        """ONE client's state tree; the engine stacks it to (N, ...)."""
+        return ()
+
+    # -- local phase --------------------------------------------------------
+
+    def local_loss_term(self, params, batch, global_params, ctx):
+        """Extra local-loss term (fedprox's proximal penalty). None = no
+        term (keeps the traced loss identical to plain FedAvg)."""
+        return None
+
+    def client_update(self, params, batches, global_params, client_state,
+                      server_state, ctx: MethodContext):
+        """One client's local phase: scan ``local_steps`` optimizer steps
+        over ``batches``. Returns (new_params, new_client_state). The
+        engine vmaps this over the stacked client axis."""
+        opt = ctx.opt
+
+        def loss(p, batch):
+            base = ctx.task.loss_fn(p, batch)
+            term = self.local_loss_term(p, batch, global_params, ctx)
+            return base if term is None else base + term
+
+        def step(carry, batch):
+            p, s, i = carry
+            g = jax.grad(loss)(p, batch)
+            p, s = opt.update(g, s, p, i)
+            return (p, s, i + 1), None
+
+        (params, _, _), _ = jax.lax.scan(
+            step, (params, opt.init(params), jnp.zeros((), jnp.int32)),
+            batches)
+        return params, client_state
+
+    # -- aggregation --------------------------------------------------------
+
+    def fuse(self, stacked, global_params, ctx: MethodContext) -> PyTree:
+        """Device-side aggregation of the stacked client params."""
+        return fusion_lib.fedavg(stacked, ctx.weights,
+                                 use_kernel=ctx.use_kernel)
+
+    def host_fuse(self, device_out, ctx: MethodContext) -> PyTree:
+        """Host-side completion (only when ``host_fusion``)."""
+        raise NotImplementedError
+
+    # -- server step --------------------------------------------------------
+
+    def server_update(self, server_state, client_states, new_client_states,
+                      global_params, fused, ctx: MethodContext):
+        """(server_state, fused aggregate) -> (server_state, new_global).
+        Server momentum / adaptive aggregation lives here; the state
+        threads across rounds."""
+        return server_state, fused
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type[FedMethod]] = {}
+
+
+def register(cls: type[FedMethod]) -> type[FedMethod]:
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available() -> tuple[str, ...]:
+    """All registered method names, sorted (the canonical enumeration for
+    CLIs, benchmarks, examples, and the README method table)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> FedMethod:
+    """Resolve a fresh method instance by registry name."""
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown federated method {name!r}; available: "
+            f"{', '.join(available())}") from None
+
+
+# ---------------------------------------------------------------------------
+# Paper methods (fedavg / fedprox / fed2 / fedma)
+# ---------------------------------------------------------------------------
+
+
+@register
+class FedAvg(FedMethod):
+    """Coordinate-based averaging (Eq. 1/18) — the all-defaults method."""
+    name = "fedavg"
+    summary = "coordinate-based (sample-weighted) mean, Eq. 1/18"
+
+
+@register
+class FedProx(FedMethod):
+    """FedAvg + proximal local loss (Li et al., MLSys'20)."""
+    name = "fedprox"
+    summary = "fedavg + proximal local-loss penalty toward the global"
+
+    def local_loss_term(self, params, batch, global_params, ctx):
+        return fusion_lib.fedprox_penalty(params, global_params,
+                                          ctx.cfg.prox_mu)
+
+
+@register
+class Fed2(FedMethod):
+    """Feature paired averaging (Eq. 19) over the group-axis tree."""
+    name = "fed2"
+    summary = "feature paired averaging over structure groups, Eq. 19"
+    uses_groups = True
+
+    def fuse(self, stacked, global_params, ctx):
+        return fusion_lib.paired_average(stacked, ctx.group_axes,
+                                         weights=ctx.weights,
+                                         group_weights=ctx.group_weights,
+                                         use_kernel=ctx.use_kernel)
+
+
+@register
+class FedMA(FedMethod):
+    """Matched averaging (Wang et al., ICLR'20 style, core/matching.py):
+    the device program ends at the stacked client params; Hungarian
+    matching fuses them on the host between rounds."""
+    name = "fedma"
+    summary = "host-side Hungarian matched averaging (core/matching.py)"
+    host_fusion = True
+
+    def check(self, ctx):
+        if ctx.task.matched_average_fn is None:
+            raise ValueError("fedma requires task.matched_average_fn "
+                             "(defined for non-grouped CNNs)")
+
+    def fuse(self, stacked, global_params, ctx):
+        return stacked          # fused on the host (host_fuse)
+
+    def host_fuse(self, stacked, ctx):
+        return ctx.task.matched_average_fn(stacked, ctx.raw_weights)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper methods proving the API
+# ---------------------------------------------------------------------------
+
+
+@register
+class Scaffold(FedMethod):
+    """SCAFFOLD (Karimireddy et al., ICML'20): per-client control variates
+    c_i and a server variate c correct client drift — every local gradient
+    becomes g - c_i + c. Both variates are engine-threaded state: c_i rides
+    the stacked client axis through the vmapped local phase, c lives in the
+    server state. The local phase runs momentum-FREE SGD: the option-II
+    control update reads the mean local gradient off (x - y_i)/(K*lr),
+    which heavy-ball momentum would inflate by its amplification factor."""
+    name = "scaffold"
+    summary = "client/server control variates correct local drift"
+    client_stateful = True
+
+    def local_opt(self, cfg):
+        from repro.optim.optimizers import sgd
+        return sgd(cfg.lr, 0.0)
+
+    def init_server_state(self, params, ctx):
+        return {"c": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def init_client_state(self, params, ctx):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def client_update(self, params, batches, global_params, client_state,
+                      server_state, ctx):
+        opt, ci, c = ctx.opt, client_state, server_state["c"]
+
+        def step(carry, batch):
+            p, s, i = carry
+            g = jax.grad(ctx.task.loss_fn)(p, batch)
+            g = jax.tree_util.tree_map(lambda gl, cil, cl: gl - cil + cl,
+                                       g, ci, c)
+            p, s = opt.update(g, s, p, i)
+            return (p, s, i + 1), None
+
+        (new_params, _, _), _ = jax.lax.scan(
+            step, (params, opt.init(params), jnp.zeros((), jnp.int32)),
+            batches)
+        # option-II control update: c_i+ = c_i - c + (x - y_i) / (K * lr)
+        k_lr = ctx.local_steps * ctx.cfg.lr
+        new_ci = jax.tree_util.tree_map(
+            lambda cil, cl, x, y: cil - cl + (x - y) / k_lr,
+            ci, c, global_params, new_params)
+        return new_params, new_ci
+
+    def server_update(self, server_state, client_states, new_client_states,
+                      global_params, fused, ctx):
+        # c <- c + mean_i(c_i+ - c_i)   (full participation)
+        new_c = jax.tree_util.tree_map(
+            lambda cl, old, new: cl + jnp.mean(new - old, axis=0),
+            server_state["c"], client_states, new_client_states)
+        return {"c": new_c}, fused
+
+
+@register
+class FedNova(FedMethod):
+    """FedNova (Wang et al., NeurIPS'20): aggregate NORMALIZED client
+    deltas d_i = (x - y_i)/tau_i and apply their weighted mean rescaled by
+    the effective step count tau_eff. The engine runs every client the same
+    tau = local_steps, under which fednova is provably equivalent to fedavg
+    (pinned by tests) — the method exists so heterogeneous-tau scenarios
+    have a registered aggregation to extend."""
+    name = "fednova"
+    summary = "normalized-delta aggregation (tau-rescaled fedavg)"
+
+    def fuse(self, stacked, global_params, ctx):
+        tau = jnp.float32(ctx.local_steps)
+        deltas = jax.tree_util.tree_map(
+            lambda y, x: (x[None] - y) / tau.astype(y.dtype),
+            stacked, global_params)
+        d = fusion_lib.fedavg(deltas, ctx.weights,
+                              use_kernel=ctx.use_kernel)
+        tau_eff = tau            # all clients run local_steps steps
+        return jax.tree_util.tree_map(
+            lambda x, dl: x - tau_eff.astype(x.dtype) * dl,
+            global_params, d)
+
+
+@register
+class FedAvgM(FedMethod):
+    """FedAvg with server momentum (Hsu et al. '19): the server treats the
+    round delta x - fused as a pseudo-gradient and applies heavy-ball
+    momentum (cfg.server_momentum, cfg.server_lr) over rounds."""
+    name = "fedavgm"
+    summary = "server heavy-ball momentum on round deltas"
+
+    def init_server_state(self, params, ctx):
+        return {"v": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def server_update(self, server_state, client_states, new_client_states,
+                      global_params, fused, ctx):
+        beta = ctx.cfg.server_momentum
+        v = jax.tree_util.tree_map(
+            lambda vl, x, f: beta * vl + (x - f), server_state["v"],
+            global_params, fused)
+        new = jax.tree_util.tree_map(
+            lambda x, vl: x - ctx.cfg.server_lr * vl, global_params, v)
+        return {"v": v}, new
+
+
+@register
+class FedAdam(FedMethod):
+    """FedAdam (Reddi et al., ICLR'21 FedOpt): Adam on the server over
+    round pseudo-gradients; m/v state threads across rounds. Step size is
+    cfg.server_lr with the FedOpt adaptivity floor eps=1e-3."""
+    name = "fedadam"
+    summary = "server Adam over round pseudo-gradients (FedOpt)"
+    b1, b2, eps = 0.9, 0.99, 1e-3
+
+    def init_server_state(self, params, ctx):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"m": z, "v": z, "t": jnp.zeros((), jnp.float32)}
+
+    def server_update(self, server_state, client_states, new_client_states,
+                      global_params, fused, ctx):
+        d = jax.tree_util.tree_map(lambda x, f: x - f, global_params, fused)
+        t = server_state["t"] + 1.0
+        m = jax.tree_util.tree_map(
+            lambda ml, dl: self.b1 * ml + (1 - self.b1) * dl,
+            server_state["m"], d)
+        v = jax.tree_util.tree_map(
+            lambda vl, dl: self.b2 * vl + (1 - self.b2) * jnp.square(dl),
+            server_state["v"], d)
+        def upd(x, ml, vl):
+            mh = ml / (1 - self.b1 ** t)
+            vh = vl / (1 - self.b2 ** t)
+            return x - ctx.cfg.server_lr * mh / (jnp.sqrt(vh) + self.eps)
+        new = jax.tree_util.tree_map(upd, global_params, m, v)
+        return {"m": m, "v": v, "t": t}, new

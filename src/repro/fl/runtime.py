@@ -2,15 +2,21 @@
 
 Thin host loop over the sharded round engine (fl/engine.py): clients
 execute SIMULTANEOUSLY as a vmapped batch over stacked params, and one
-jitted function runs the whole round — broadcast, local SGD, fusion
-(DESIGN.md §5). Pass ``mesh=`` to shard the client axis over the mesh
-"data" axis; leave it None for single-host vmap.
+jitted function runs the whole round — broadcast, local SGD, fusion,
+server step (DESIGN.md §5). Pass ``mesh=`` to shard the client axis over
+the mesh "data" axis; leave it None for single-host vmap.
 
-Fusion methods:
+Methods come from the fl/methods.py registry (DESIGN.md §6) — see
+``methods.available()`` for the full set; ``FLConfig.method`` is validated
+against the registry at construction. The paper's comparison class:
+
   fedavg   coordinate-based mean (Eq. 1), sample-weighted
   fedprox  fedavg + proximal local loss (mu/2 ||w - w_g||^2)
   fed2     feature paired averaging (Eq. 19) over the group-axis tree
   fedma    one-shot matched averaging (WLA baseline, core/matching.py)
+
+plus the beyond-paper strategies proving the method API (scaffold,
+fednova, fedavgm, fedadam — fl/methods.py docstrings).
 
 The host never blocks on device values inside the round loop: batches are
 staged ahead, eval results stay device-resident, and accuracies are
@@ -28,6 +34,7 @@ import numpy as np
 
 from repro.core import fusion as fusion_lib
 from repro.core import matching as matching_lib
+from repro.fl import methods as methods_lib
 from repro.fl.engine import make_round_engine
 
 PyTree = Any
@@ -42,10 +49,18 @@ class FLConfig:
     batch_size: int = 32
     lr: float = 0.05
     momentum: float = 0.9
-    method: str = "fed2"        # fedavg | fedprox | fed2 | fedma
+    method: str = "fed2"        # any name in methods.available()
     prox_mu: float = 0.01
+    server_lr: float = 1.0      # server-step methods (fedavgm, fedadam)
+    server_momentum: float = 0.9
     seed: int = 0
     eval_batch: int = 512
+
+    def __post_init__(self):
+        if self.method not in methods_lib.available():
+            raise ValueError(
+                f"unknown federated method {self.method!r}; available: "
+                f"{', '.join(methods_lib.available())}")
 
 
 @dataclasses.dataclass
@@ -60,7 +75,8 @@ class FLTask:
 
 def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
     """Per round: (N, n_steps, B, ...) batch arrays, sampling with
-    replacement where a client's shard is short."""
+    replacement where a client's shard is short (empty shards index
+    sample 0)."""
     per_client = []
     for idx in parts:
         steps = []
@@ -83,8 +99,8 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     test_batches: list of batch dicts for global eval.
 
     class_counts (N, C) + group_spec enable Eq. 19's non-IID refinement for
-    fed2: group g fuses only across nodes that hold g's classes
-    (presence-weighted paired averaging).
+    group-structured methods (fed2): group g fuses only across nodes that
+    hold g's classes (presence-weighted paired averaging).
 
     mesh: optional launch/mesh.py mesh — shards the client axis over "data".
     use_kernel: force the Pallas fusion fast path on/off (None = default).
@@ -97,13 +113,15 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     key = jax.random.PRNGKey(cfg.seed)
     global_params = task.init_fn(key)
     weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
+    method = methods_lib.get(cfg.method)
     gw = None
-    if cfg.method == "fed2" and class_counts is not None \
+    if method.uses_groups and class_counts is not None \
             and group_spec is not None:
         gw = fusion_lib.presence_group_weights(class_counts, group_spec)
     engine = make_round_engine(task, cfg, global_params, mesh=mesh,
                                weights=weights, group_weights=gw,
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel, method=method)
+    state = engine.init_state(global_params)
 
     history = {"round": [], "acc": [], "wall": []}
     n_steps = cfg.local_epochs * cfg.steps_per_epoch
@@ -112,7 +130,8 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     for r in range(cfg.rounds):
         batches = _pack_client_batches(parts, get_batch, n_steps,
                                        cfg.batch_size, rng)
-        global_params = engine.run_round(global_params, batches)
+        state, global_params = engine.run_round(state, global_params,
+                                                batches)
         acc = jnp.mean(jnp.stack([engine.eval_fn(global_params, tb)
                                   for tb in test_batches]))
         accs.append(acc)

@@ -6,13 +6,16 @@ the SAME round engine (fl/engine.py) that serves real runs:
   local SGD steps:       vmapped over clients (pure data-parallel)
   Fed2 fusion (Eq. 19):  paired averaging = mean over the client axis
                          -> ONE all-reduce over "data" in the lowered HLO
-  FedMA:                 the device program ENDS at the stacked params;
-                         matching runs on the host, so its record shows
-                         zero fusion collectives plus the per-round
+  host-fusion methods:   (fedma) the device program ENDS at the stacked
+                         params; matching runs on the host, so its record
+                         shows zero fusion collectives plus the per-round
                          host-gather bytes Fed2 never pays.
 
-Covers all four fusion methods (fedavg/fedprox/fed2/fedma) x both model
-families (cnn + lm); one collective-bytes JSON record per combination.
+Covers EVERY method in the fl/methods.py registry (``methods.available()``
+— fedavg/fedprox/fed2/fedma plus scaffold/fednova/fedavgm/fedadam) x both
+model families (cnn + lm); one collective-bytes JSON record per
+combination. Stateful methods (scaffold control variates, server
+momentum/Adam) lower with their state trees threaded through the round.
 
   PYTHONPATH=src python -m repro.launch.fl_dryrun [--clients 16]
   PYTHONPATH=src python -m repro.launch.fl_dryrun --mesh host   # CPU smoke
@@ -44,25 +47,26 @@ import traceback     # noqa: E402
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.fl.engine import lower_round, stacked_param_bytes  # noqa: E402
+from repro.fl import methods as methods_lib                   # noqa: E402
+from repro.fl.engine import (lower_round, resolve_use_kernel,  # noqa: E402
+                             stacked_param_bytes)
 from repro.fl.runtime import FLConfig, cnn_task, lm_task      # noqa: E402
 from repro.launch.dryrun import collective_bytes              # noqa: E402
 from repro.launch.mesh import (make_host_mesh,                # noqa: E402
                                make_production_mesh)
 
-METHODS = ("fedavg", "fedprox", "fed2", "fedma")
 FAMILIES = ("cnn", "lm")
 
 
 def _cnn_case(method: str, mesh_kind: str):
     from repro.configs import vgg9
+    grouped = methods_lib.get(method).uses_groups
     if mesh_kind == "host":     # reduced widths: CPU smoke compiles fast
         cfg = (vgg9.reduced(fed2_groups=5, decouple=3, norm="gn")
-               if method == "fed2" else vgg9.reduced(fed2_groups=0,
-                                                     norm="none"))
+               if grouped else vgg9.reduced(fed2_groups=0, norm="none"))
     else:
         cfg = (vgg9.full(fed2_groups=10, decouple=6, norm="gn")
-               if method == "fed2" else vgg9.baseline())
+               if grouped else vgg9.baseline())
     return cnn_task(cfg), cfg.arch_id
 
 
@@ -70,7 +74,7 @@ def _lm_case(method: str):
     from repro.configs import get_config
     from repro.configs.common import with_fed2
     cfg = get_config("llama3.2-1b", reduced=True)
-    if method == "fed2":
+    if methods_lib.get(method).uses_groups:
         cfg = with_fed2(cfg, groups=4, decouple=1)
     return lm_task(cfg), "llama3.2-1b-reduced"
 
@@ -86,28 +90,31 @@ def _batch_elems(family: str, batch: int, seq: int) -> dict:
 
 def run_one(method: str, family: str, mesh, mesh_name: str, *,
             clients: int, local_steps: int, batch: int, seq: int,
-            outdir: str, verbose: bool = True) -> dict:
+            outdir: str, use_kernel=None, verbose: bool = True) -> dict:
     tag = f"fl_round_{method}_{family}_{mesh_name}"
     rec = {"kind": "fl_round", "method": method, "family": family,
            "mesh": mesh_name, "clients": clients,
            "local_steps": local_steps, "batch": batch}
-    if family == "lm" and method == "fedma":
-        rec.update(status="skipped",
-                   reason="matched averaging is defined for non-grouped "
-                          "CNNs (core/matching.py); no LM analog")
-        _write(outdir, tag, rec)
-        if verbose:
-            print(f"[skip] {tag}: {rec['reason']}")
-        return rec
+    meth = methods_lib.get(method)
     try:
         kind = "host" if mesh_name == "1x1" else "pod"
         task, arch = (_cnn_case(method, kind) if family == "cnn"
                       else _lm_case(method))
+        if meth.host_fusion and task.matched_average_fn is None:
+            rec.update(status="skipped",
+                       reason=f"{method} needs task.matched_average_fn "
+                              "(host matched averaging is defined for "
+                              "non-grouped CNNs; no LM analog)")
+            _write(outdir, tag, rec)
+            if verbose:
+                print(f"[skip] {tag}: {rec['reason']}")
+            return rec
         fl = FLConfig(n_nodes=clients, method=method)
         t0 = time.time()
         lowered = lower_round(task, fl, mesh, _batch_elems(family, batch,
                                                            seq),
-                              local_steps=local_steps)
+                              local_steps=local_steps,
+                              use_kernel=use_kernel)
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()
@@ -117,20 +124,21 @@ def run_one(method: str, family: str, mesh, mesh_name: str, *,
         rec.update(
             status="ok", arch=arch,
             lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            use_kernel=resolve_use_kernel(use_kernel, mesh),
             memory={"temp_bytes": mem.temp_size_in_bytes,
                     "argument_bytes": mem.argument_size_in_bytes,
                     "output_bytes": mem.output_size_in_bytes},
             collectives=colls,
-            host_matching=(method == "fedma"),
+            host_matching=meth.host_fusion,
             host_gather_bytes=(stacked_param_bytes(task, clients)
-                               if method == "fedma" else 0))
+                               if meth.host_fusion else 0))
         if verbose:
             busy = {k: round(v["bytes"] / 2**20, 1)
                     for k, v in colls.items() if v["count"]}
             print(f"[ok]   {tag}: lower {t_lower:.1f}s compile "
                   f"{t_compile:.1f}s collectives(MiB) {busy}"
                   + (f" host_gather {rec['host_gather_bytes']/2**20:.1f}MiB"
-                     if method == "fedma" else ""))
+                     if meth.host_fusion else ""))
     except Exception as e:  # noqa: BLE001 — record, keep the matrix going
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    trace=traceback.format_exc()[-2000:])
@@ -151,15 +159,17 @@ DEFAULT_OUT = os.path.normpath(os.path.join(
     "benchmarks", "artifacts_perf"))      # cwd-independent, like flbench
 
 
-def run_matrix(*, mesh_kind: str = "pod", methods=METHODS,
+def run_matrix(*, mesh_kind: str = "pod", methods=None,
                families=FAMILIES, clients: int = 16, local_steps: int = 4,
                batch: int = 32, seq: int = 64, outdir: str = DEFAULT_OUT,
-               verbose: bool = True) -> list:
-    bad = [m for m in methods if m not in METHODS] + \
+               use_kernel=None, verbose: bool = True) -> list:
+    methods = methods_lib.available() if methods is None else methods
+    bad = [m for m in methods if m not in methods_lib.available()] + \
           [f for f in families if f not in FAMILIES]
     if bad:
         raise ValueError(f"unknown method/family: {bad}; "
-                         f"methods={METHODS} families={FAMILIES}")
+                         f"methods={methods_lib.available()} "
+                         f"families={FAMILIES}")
     if mesh_kind == "host":
         mesh, mesh_name = make_host_mesh(), "1x1"
     elif mesh_kind == "pod":
@@ -169,7 +179,7 @@ def run_matrix(*, mesh_kind: str = "pod", methods=METHODS,
                          "(expected 'pod' or 'host')")
     return [run_one(m, f, mesh, mesh_name, clients=clients,
                     local_steps=local_steps, batch=batch, seq=seq,
-                    outdir=outdir, verbose=verbose)
+                    outdir=outdir, use_kernel=use_kernel, verbose=verbose)
             for f in families for m in methods]
 
 
@@ -177,24 +187,33 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod", choices=["pod", "host"])
     ap.add_argument("--methods", default="all",
-                    help="comma list of fedavg,fedprox,fed2,fedma or 'all'")
+                    help="comma list from "
+                         f"{','.join(methods_lib.available())} or 'all'")
     ap.add_argument("--families", default="all",
                     help="comma list of cnn,lm or 'all'")
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--use-kernel", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="force the Pallas fusion fast path on "
+                         "(--use-kernel) or off (--no-use-kernel); "
+                         "default follows the env-driven fusion default. "
+                         "Honored on 1-device meshes; multi-device meshes "
+                         "force the collective path")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
 
-    methods = METHODS if args.methods == "all" \
+    methods = methods_lib.available() if args.methods == "all" \
         else tuple(args.methods.split(","))
     families = FAMILIES if args.families == "all" \
         else tuple(args.families.split(","))
     recs = run_matrix(mesh_kind=args.mesh, methods=methods,
                       families=families, clients=args.clients,
                       local_steps=args.local_steps, batch=args.batch,
-                      seq=args.seq, outdir=args.out)
+                      seq=args.seq, outdir=args.out,
+                      use_kernel=args.use_kernel)
     n_fail = sum(r["status"] == "error" for r in recs)
     print(f"done; {len(recs)} records, {n_fail} failures")
     raise SystemExit(1 if n_fail else 0)

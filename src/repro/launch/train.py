@@ -64,6 +64,7 @@ def run_fl(args):
 
     from repro.data.synthetic import (dirichlet_partition,
                                       make_image_dataset, nxc_partition)
+    from repro.fl import methods as methods_lib
     from repro.fl.runtime import FLConfig, cnn_task, run_federated
 
     if args.dry_run:
@@ -81,7 +82,7 @@ def run_fl(args):
 
     mod = importlib.import_module(
         f"repro.configs.{args.arch.replace('-', '_').replace('.', '_')}")
-    if args.method == "fed2":
+    if methods_lib.get(args.method).uses_groups:
         cfg = (mod.reduced() if args.reduced else
                mod.full(fed2_groups=args.fed2_groups))
     else:
@@ -117,6 +118,8 @@ def run_fl(args):
 
 
 def main():
+    from repro.fl import methods as methods_lib
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["lm", "fl"], default="fl")
     ap.add_argument("--arch", default="vgg9")
@@ -124,7 +127,7 @@ def main():
     ap.add_argument("--fed2", action="store_true")
     ap.add_argument("--fed2-groups", type=int, default=8)
     ap.add_argument("--method", default="fed2",
-                    choices=["fedavg", "fedprox", "fed2", "fedma"])
+                    choices=list(methods_lib.available()))
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--nodes", type=int, default=10)

@@ -15,8 +15,9 @@ def _design_sections():
 def test_design_md_exists_with_cited_sections():
     assert (ROOT / "DESIGN.md").is_file()
     sections = _design_sections()
-    # the sections the codebase has cited since the seed
-    for must in ("3", "5", "7.1", "Shape-applicability"):
+    # the sections the codebase cites (§6 = method protocol; the former
+    # §7 Data/§7.1 Synthetic renumbered to §8/§8.1 when §6 was inserted)
+    for must in ("3", "5", "6", "8.1", "Shape-applicability"):
         assert must in sections, (must, sections)
 
 
@@ -29,6 +30,20 @@ def test_every_design_ref_in_src_resolves():
             if ref not in sections:
                 missing.append((str(py.relative_to(ROOT)), ref))
     assert not missing, f"dangling DESIGN.md references: {missing}"
+
+
+def test_readme_method_table_matches_registry():
+    """The README method table is generated from the registry: every
+    registered method appears as a table row with its summary line."""
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.fl import methods
+    readme = (ROOT / "README.md").read_text()
+    for name in methods.available():
+        meth = methods.get(name)
+        row = f"| `{name}` |"
+        assert row in readme, f"README method table misses {row}"
+        assert meth.summary in readme, (name, meth.summary)
 
 
 def test_readme_quotes_tier1_verify():

@@ -56,7 +56,7 @@ def test_engine_round_matches_decomposed_reference(method):
 
     engine = make_round_engine(task, fl, gp, weights=weights,
                                use_kernel=False)
-    got = engine.run_round(gp, batches)
+    _, got = engine.run_round(engine.init_state(gp), gp, batches)
 
     local = make_local_phase(task, fl, sgd(fl.lr, fl.momentum))
     stacked = fusion_lib.broadcast_global(gp, fl.n_nodes)
@@ -127,3 +127,59 @@ def test_stacked_param_bytes():
     one = stacked_param_bytes(task, 1)
     assert stacked_param_bytes(task, 4) == 4 * one
     assert one > 0
+
+
+# ---------------------------------------------------------------------------
+# _pack_client_batches
+# ---------------------------------------------------------------------------
+
+
+def _idx_batch(sel):
+    """Identity batch: carries the selected indices through the packer."""
+    return {"idx": jnp.asarray(np.asarray(sel, np.int64))}
+
+
+def test_pack_client_batches_shapes_and_membership():
+    parts = [np.array([0, 1, 2, 3, 4]), np.array([10, 11, 12])]
+    out = _pack_client_batches(parts, _idx_batch, n_steps=3, batch_size=2,
+                               rng=np.random.default_rng(0))
+    assert out["idx"].shape == (2, 3, 2)          # (N, steps, B)
+    for c, part in enumerate(parts):
+        assert set(np.asarray(out["idx"][c]).ravel()) <= set(part)
+
+
+def test_pack_client_batches_empty_shard_selects_index_zero():
+    """An empty client shard must still produce full-shape batches
+    (index 0 placeholders) so the vmapped round never sees ragged data."""
+    parts = [np.array([], np.int64), np.array([5, 6, 7, 8])]
+    out = _pack_client_batches(parts, _idx_batch, n_steps=2, batch_size=3,
+                               rng=np.random.default_rng(0))
+    assert out["idx"].shape == (2, 2, 3)
+    np.testing.assert_array_equal(np.asarray(out["idx"][0]),
+                                  np.zeros((2, 3), np.int64))
+
+
+def test_pack_client_batches_short_shard_samples_with_replacement():
+    """A shard shorter than the batch size samples WITH replacement —
+    every batch is full and draws only from the client's own shard."""
+    parts = [np.array([41, 42])]                   # shard < batch_size
+    out = _pack_client_batches(parts, _idx_batch, n_steps=2, batch_size=5,
+                               rng=np.random.default_rng(0))
+    got = np.asarray(out["idx"][0])
+    assert got.shape == (2, 5)
+    assert set(got.ravel()) <= {41, 42}
+    # with replacement, 5 draws from 2 values must repeat something
+    assert any(len(np.unique(row)) < len(row) for row in got)
+
+
+def test_pack_client_batches_deterministic_under_fixed_seed():
+    parts = [np.arange(20), np.arange(30, 50), np.array([7])]
+    a = _pack_client_batches(parts, _idx_batch, n_steps=4, batch_size=6,
+                             rng=np.random.default_rng(123))
+    b = _pack_client_batches(parts, _idx_batch, n_steps=4, batch_size=6,
+                             rng=np.random.default_rng(123))
+    np.testing.assert_array_equal(np.asarray(a["idx"]),
+                                  np.asarray(b["idx"]))
+    c = _pack_client_batches(parts, _idx_batch, n_steps=4, batch_size=6,
+                             rng=np.random.default_rng(124))
+    assert not np.array_equal(np.asarray(a["idx"]), np.asarray(c["idx"]))
