@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke bench-infra dryrun-fl
+.PHONY: test smoke bench-infra bench-cohort dryrun-fl
 
 # the tier-1 gate (ROADMAP.md)
 test:
@@ -19,6 +19,10 @@ smoke:
 # full production-mesh dry-run matrix (fake 16x16 pod; slower)
 dryrun-fl:
 	$(PY) -m repro.launch.fl_dryrun
+
+# host-loop rounds/sec vs population at fixed cohort (DESIGN.md §9)
+bench-cohort:
+	$(PY) benchmarks/flbench.py bench_cohort
 
 bench-infra:
 	REPRO_BENCH_SET=infra $(PY) -m benchmarks.run

@@ -68,7 +68,8 @@ def model_cfg(arch: str, method: str, *, groups=5, decouple=2, norm=None):
 
 def run_case(name: str, method: str, *, arch="vgg9", nodes=6, cpn=None,
              alpha=None, rounds=None, local_epochs=1, steps_per_epoch=8,
-             batch=16, lr=0.008, seed=0, cfg=None) -> dict:
+             batch=16, lr=0.008, seed=0, cfg=None, cohort_size=None,
+             sampler="full") -> dict:
     rounds = rounds or (8 if QUICK else 14)
     ds, test = dataset()
     if alpha is not None:
@@ -85,7 +86,8 @@ def run_case(name: str, method: str, *, arch="vgg9", nodes=6, cpn=None,
     test_batches = [{"images": jnp.asarray(test.images),
                      "labels": jnp.asarray(test.labels)}]
     cfg = cfg if cfg is not None else model_cfg(arch, method)
-    fl = FLConfig(n_nodes=nodes, rounds=rounds, local_epochs=local_epochs,
+    fl = FLConfig(population=nodes, cohort_size=cohort_size,
+                  sampler=sampler, rounds=rounds, local_epochs=local_epochs,
                   steps_per_epoch=steps_per_epoch, batch_size=batch, lr=lr,
                   momentum=0.9, method=method, seed=seed)
     # Presence-weighted pairing is OPT-IN: the calibration study showed it
@@ -159,19 +161,20 @@ def bench_engine(*, nodes=4, rounds=None, steps_per_epoch=6,
     rounds = rounds or (6 if QUICK else 14)
     batches, weights = _engine_fixture(nodes, steps_per_epoch, batch)
     cfg = model_cfg("vgg9", "fed2")
-    fl = FLConfig(n_nodes=nodes, rounds=rounds, local_epochs=1,
+    fl = FLConfig(population=nodes, rounds=rounds, local_epochs=1,
                   steps_per_epoch=steps_per_epoch, batch_size=batch,
                   lr=0.008, momentum=0.9, method="fed2", seed=0)
     task = cnn_task(cfg)
     gp0 = task.init_fn(jax.random.PRNGKey(0))
 
-    engine = make_round_engine(task, fl, gp0, weights=weights)
+    engine = make_round_engine(task, fl, gp0)
     state0 = engine.init_state(gp0)
-    jax.block_until_ready(engine.run_round(state0, gp0, batches))  # compile
+    jax.block_until_ready(engine.run_round(state0, gp0, batches,
+                                           weights=weights))  # compile
     t0 = time.time()
     st, g_e = state0, gp0
     for _ in range(rounds):
-        st, g_e = engine.run_round(st, g_e, batches)
+        st, g_e = engine.run_round(st, g_e, batches, weights=weights)
     jax.block_until_ready(g_e)
     engine_s = time.time() - t0
 
@@ -221,18 +224,20 @@ def bench_methods(*, nodes=4, rounds=None, steps_per_epoch=4,
     recs = []
     for method in methods_lib.available():
         cfg = model_cfg("vgg9", method)
-        fl = FLConfig(n_nodes=nodes, rounds=rounds, local_epochs=1,
+        fl = FLConfig(population=nodes, rounds=rounds, local_epochs=1,
                       steps_per_epoch=steps_per_epoch, batch_size=batch,
                       lr=0.008, momentum=0.9, method=method, seed=0)
         task = cnn_task(cfg)
         gp = task.init_fn(jax.random.PRNGKey(0))
-        engine = make_round_engine(task, fl, gp, weights=weights)
+        engine = make_round_engine(task, fl, gp)
         state = engine.init_state(gp)
-        state, gp = engine.run_round(state, gp, batches)   # compile
+        state, gp = engine.run_round(state, gp, batches,
+                                     weights=weights)     # compile
         jax.block_until_ready(gp)
         t0 = time.time()
         for _ in range(rounds):
-            state, gp = engine.run_round(state, gp, batches)
+            state, gp = engine.run_round(state, gp, batches,
+                                         weights=weights)
         jax.block_until_ready(gp)
         dt = time.time() - t0
         recs.append({"method": method, "rounds": rounds,
@@ -245,15 +250,111 @@ def bench_methods(*, nodes=4, rounds=None, steps_per_epoch=4,
     return recs
 
 
-def main():
-    rec = bench_engine()
-    us = 1e6 * rec["engine_s"] / rec["rounds"]
-    print(f"fl_engine_round,{us:.0f},"
-          f"speedup_vs_seed_loop={rec['speedup']:.2f}x,"
-          f"params_match={rec['params_match']}")
-    for r in bench_methods():
-        print(f"fl_method_{r['method']},{r['us_per_round']},"
-              f"rounds_per_s={r['rounds_per_s']}")
+def bench_cohort(*, populations=(16, 64, 256), cohort=8, rounds=None,
+                 steps_per_epoch=4, batch=16, method="fedavg",
+                 sampler="uniform") -> list:
+    """Rounds/sec of the SAMPLED host loop vs population size at a fixed
+    cohort (engine width): the engine compiles once per cohort width, so
+    growing the logical population must cost only the host-side
+    gather/pack/scatter — the scaling direction the population API exists
+    for (DESIGN.md §9)."""
+    import jax
+
+    rounds = rounds or (4 if QUICK else 10)
+    ds, _ = dataset()
+
+    def get_batch(sel):
+        return {"images": jnp.asarray(ds.images[sel]),
+                "labels": jnp.asarray(ds.labels[sel])}
+
+    from repro.fl.population import Population
+    from repro.fl import population as population_lib
+    from repro.fl.engine import make_round_engine
+    from repro.fl.runtime import run_sampled_round
+
+    recs = []
+    cfg = model_cfg("vgg9", method)
+    task = cnn_task(cfg)
+    meth = methods_lib.get(method)
+    smp = population_lib.get(sampler)
+    gp0 = task.init_fn(jax.random.PRNGKey(0))
+    # ONE engine for every population: the compiled round is cohort-width
+    # parameterized — that invariance is the point of the benchmark.
+    # (ctx.population is only read by scaffold's server scale; reusing
+    # the engine across populations is exact for stateless methods.)
+    engine = make_round_engine(
+        task, FLConfig(population=populations[0], cohort_size=cohort,
+                       sampler=sampler, rounds=rounds, local_epochs=1,
+                       steps_per_epoch=steps_per_epoch, batch_size=batch,
+                       lr=0.008, momentum=0.9, method=method, seed=0),
+        gp0)
+    for population in populations:
+        parts = nxc_partition(ds.labels, population, 5, N_CLASSES, seed=0)
+        fl = FLConfig(population=population, cohort_size=cohort,
+                      sampler=sampler, rounds=rounds, local_epochs=1,
+                      steps_per_epoch=steps_per_epoch, batch_size=batch,
+                      lr=0.008, momentum=0.9, method=method, seed=0)
+        pop = Population.from_parts(parts)
+        gp = gp0
+        server = engine.init_server_state(gp)
+        pop.clients = engine.init_population_state(gp, pop.size)
+        rng = np.random.default_rng(0)
+
+        uniform_w = smp.fusion_weights == "uniform"
+
+        def one_round(r, server, gp):
+            ids = smp.sample(r, population, cohort, rng,
+                             weights=pop.weights)
+            return run_sampled_round(engine, pop, meth, server, gp, ids,
+                                     get_batch, steps_per_epoch, fl, rng,
+                                     uniform_weights=uniform_w)
+
+        server, gp = one_round(0, server, gp)              # compile
+        jax.block_until_ready(gp)
+        t0 = time.time()
+        for r in range(1, rounds + 1):
+            server, gp = one_round(r, server, gp)
+        jax.block_until_ready(gp)
+        dt = time.time() - t0
+        recs.append({"population": population, "cohort_size": cohort,
+                     "sampler": sampler, "method": method,
+                     "rounds": rounds,
+                     "rounds_per_s": round(rounds / dt, 3),
+                     "us_per_round": round(1e6 * dt / rounds)})
+    os.makedirs(ARTIFACTS_PERF, exist_ok=True)
+    with open(os.path.join(ARTIFACTS_PERF, "flbench_cohort.json"),
+              "w") as f:
+        json.dump(recs, f, indent=1)
+    return recs
+
+
+BENCHES = {"bench_engine": None, "bench_methods": None,
+           "bench_cohort": None}   # CLI subcommand names
+
+
+def main(argv=None):
+    import sys
+    chosen = (argv if argv is not None else sys.argv[1:]) or \
+        ["bench_engine", "bench_methods", "bench_cohort"]
+    bad = [c for c in chosen if c not in BENCHES]
+    if bad:
+        raise SystemExit(f"unknown bench {bad}; available: "
+                         f"{', '.join(BENCHES)}")
+    if "bench_engine" in chosen:
+        rec = bench_engine()
+        us = 1e6 * rec["engine_s"] / rec["rounds"]
+        print(f"fl_engine_round,{us:.0f},"
+              f"speedup_vs_seed_loop={rec['speedup']:.2f}x,"
+              f"params_match={rec['params_match']}")
+    if "bench_methods" in chosen:
+        for r in bench_methods():
+            print(f"fl_method_{r['method']},{r['us_per_round']},"
+                  f"rounds_per_s={r['rounds_per_s']}")
+    if "bench_cohort" in chosen:
+        for r in bench_cohort():
+            print(f"fl_cohort_pop{r['population']},{r['us_per_round']},"
+                  f"rounds_per_s={r['rounds_per_s']},"
+                  f"cohort={r['cohort_size']}")
 
 
 if __name__ == "__main__":

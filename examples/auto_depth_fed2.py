@@ -57,7 +57,7 @@ def main():
         return {"images": jnp.asarray(ds.images[sel]),
                 "labels": jnp.asarray(ds.labels[sel])}
 
-    fl = FLConfig(n_nodes=6, rounds=6, local_epochs=1, steps_per_epoch=8,
+    fl = FLConfig(population=6, rounds=6, local_epochs=1, steps_per_epoch=8,
                   batch_size=16, lr=0.008, momentum=0.9, method="fed2")
     h = run_federated(cnn_task(cfg), fl, parts, get_batch,
                       [{"images": jnp.asarray(test.images),

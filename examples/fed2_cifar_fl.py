@@ -1,9 +1,15 @@
 """End-to-end driver for the paper's scenario: federated image
 classification under non-IID skew, Fed2 vs any set of registered methods
-(fl/methods.py — ``--methods all`` runs the whole registry).
+(fl/methods.py — ``--methods all`` runs the whole registry), with the
+population decoupled from the per-round cohort (fl/population.py):
+``--population`` logical clients, of which ``--cohort-size`` train each
+round under the ``--sampler`` participation strategy.
 
-  PYTHONPATH=src python examples/fed2_cifar_fl.py [--rounds 10] [--nodes 6]
+  PYTHONPATH=src python examples/fed2_cifar_fl.py [--rounds 10]
   PYTHONPATH=src python examples/fed2_cifar_fl.py --methods all
+  # partial participation on the host mesh (sharded cohort axis):
+  PYTHONPATH=src python examples/fed2_cifar_fl.py --population 64 \
+      --cohort-size 16 --sampler uniform --mesh host
 """
 import argparse
 
@@ -12,13 +18,23 @@ import jax.numpy as jnp
 from repro.configs import vgg9
 from repro.data.synthetic import make_image_dataset, nxc_partition
 from repro.fl import methods as methods_lib
+from repro.fl import population as population_lib
 from repro.fl.runtime import FLConfig, cnn_task, run_federated
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=10)
-    ap.add_argument("--nodes", type=int, default=6)
+    ap.add_argument("--population", type=int, default=6,
+                    help="logical clients behind the run")
+    ap.add_argument("--cohort-size", type=int, default=None,
+                    help="participants per round (engine width); "
+                         "default = the full population")
+    ap.add_argument("--sampler", default="full",
+                    choices=list(population_lib.available()))
+    ap.add_argument("--mesh", default="none", choices=["none", "host"],
+                    help="host: shard the cohort axis over the 1-device "
+                         "host mesh (the TPU code path on CPU)")
     ap.add_argument("--classes-per-node", type=int, default=5)
     ap.add_argument("--noise", type=float, default=1.6)
     ap.add_argument("--methods", default="fedavg,fed2",
@@ -28,8 +44,8 @@ def main():
 
     ds = make_image_dataset(3000, n_classes=10, seed=0, noise=args.noise)
     test = make_image_dataset(600, n_classes=10, seed=99, noise=args.noise)
-    parts = nxc_partition(ds.labels, args.nodes, args.classes_per_node, 10,
-                          seed=1)
+    parts = nxc_partition(ds.labels, args.population,
+                          args.classes_per_node, 10, seed=1)
 
     def get_batch(sel):
         return {"images": jnp.asarray(ds.images[sel]),
@@ -38,6 +54,11 @@ def main():
     test_batches = [{"images": jnp.asarray(test.images),
                      "labels": jnp.asarray(test.labels)}]
 
+    mesh = None
+    if args.mesh == "host":
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+
     results = {}
     chosen = (methods_lib.available() if args.methods == "all"
               else args.methods.split(","))
@@ -45,12 +66,15 @@ def main():
         cfg = (vgg9.reduced(fed2_groups=5, decouple=3, norm="gn")
                if methods_lib.get(method).uses_groups else
                vgg9.reduced(fed2_groups=0, norm="none"))
-        fl = FLConfig(n_nodes=args.nodes, rounds=args.rounds,
-                      local_epochs=1, steps_per_epoch=6, batch_size=16,
-                      lr=0.015, momentum=0.9, method=method, seed=0)
-        print(f"=== {method} ===")
+        fl = FLConfig(population=args.population,
+                      cohort_size=args.cohort_size, sampler=args.sampler,
+                      rounds=args.rounds, local_epochs=1,
+                      steps_per_epoch=6, batch_size=16, lr=0.015,
+                      momentum=0.9, method=method, seed=0)
+        print(f"=== {method} (population {fl.population}, cohort "
+              f"{fl.cohort_size}, sampler {fl.sampler}) ===")
         h = run_federated(cnn_task(cfg), fl, parts, get_batch, test_batches,
-                          log=print)
+                          log=print, mesh=mesh)
         results[method] = h["acc"]
 
     print("\nmethod, best_acc, final_acc, acc_curve")

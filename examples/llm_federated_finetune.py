@@ -20,10 +20,18 @@ from repro.fl.runtime import FLConfig, lm_task, run_federated
 
 
 def main():
+    from repro.fl import population as population_lib
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--rounds", type=int, default=4)
-    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--nodes", type=int, default=4,
+                    help="logical client population (one token domain "
+                         "per client)")
+    ap.add_argument("--cohort-size", type=int, default=None,
+                    help="participants per round; default = all nodes")
+    ap.add_argument("--sampler", default="full",
+                    choices=list(population_lib.available()))
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--methods", default="fedavg,fed2",
                     help="comma list from "
@@ -60,7 +68,8 @@ def main():
             print(f"{method}: skipped (host matched averaging is defined "
                   "for non-grouped CNNs; no LM analog)")
             continue
-        fl = FLConfig(n_nodes=args.nodes, rounds=args.rounds,
+        fl = FLConfig(population=args.nodes, cohort_size=args.cohort_size,
+                      sampler=args.sampler, rounds=args.rounds,
                       local_epochs=1, steps_per_epoch=4, batch_size=8,
                       lr=0.01, momentum=0.9, method=method, seed=0)
         h = run_federated(lm_task(cfg), fl, parts, get_batch, test_batches,

@@ -54,26 +54,28 @@ def make_image_dataset(n: int, n_classes: int = 10, hw: int = 32,
     return ImageDataset(images, labels, n_classes)
 
 
-def nxc_partition(labels: np.ndarray, n_nodes: int, classes_per_node: int,
+def nxc_partition(labels: np.ndarray, n_clients: int, classes_per_node: int,
                   n_classes: int, seed: int = 0) -> list[np.ndarray]:
-    """Paper's N x C protocol: node j sees only ``classes_per_node`` classes.
-    Class shards are dealt round-robin so every class is covered."""
+    """Paper's N x C protocol: client j sees only ``classes_per_node``
+    classes. Class shards are dealt round-robin so every class is covered
+    (and, when ``n_clients * classes_per_node >= n_classes``, every
+    sample lands on exactly one client — tests/test_properties.py)."""
     rng = np.random.default_rng(seed)
     # assign class sets: cycle through classes so coverage is uniform
     class_order = rng.permutation(n_classes)
-    node_classes = [set() for _ in range(n_nodes)]
+    node_classes = [set() for _ in range(n_clients)]
     ptr = 0
-    for j in range(n_nodes):
+    for j in range(n_clients):
         for _ in range(classes_per_node):
             node_classes[j].add(int(class_order[ptr % n_classes]))
             ptr += 1
-    # split each class's indices among the nodes that hold it
+    # split each class's indices among the clients that hold it
     idx_by_class = [np.flatnonzero(labels == c) for c in range(n_classes)]
     for c in range(n_classes):
         rng.shuffle(idx_by_class[c])
-    holders = {c: [j for j in range(n_nodes) if c in node_classes[j]]
+    holders = {c: [j for j in range(n_clients) if c in node_classes[j]]
                for c in range(n_classes)}
-    parts = [[] for _ in range(n_nodes)]
+    parts = [[] for _ in range(n_clients)]
     for c in range(n_classes):
         hs = holders[c]
         if not hs:
@@ -84,16 +86,16 @@ def nxc_partition(labels: np.ndarray, n_nodes: int, classes_per_node: int,
             for p in parts]
 
 
-def dirichlet_partition(labels: np.ndarray, n_nodes: int, alpha: float = 0.5,
-                        n_classes: int = 10, seed: int = 0) \
-        -> list[np.ndarray]:
+def dirichlet_partition(labels: np.ndarray, n_clients: int,
+                        alpha: float = 0.5, n_classes: int = 10,
+                        seed: int = 0) -> list[np.ndarray]:
     """FedMA protocol: allocate a Dir(alpha) proportion of each class."""
     rng = np.random.default_rng(seed)
-    parts = [[] for _ in range(n_nodes)]
+    parts = [[] for _ in range(n_clients)]
     for c in range(n_classes):
         idx = np.flatnonzero(labels == c)
         rng.shuffle(idx)
-        props = rng.dirichlet(alpha * np.ones(n_nodes))
+        props = rng.dirichlet(alpha * np.ones(n_clients))
         cuts = (np.cumsum(props)[:-1] * len(idx)).astype(int)
         for j, chunk in enumerate(np.split(idx, cuts)):
             parts[j].append(chunk)

@@ -1,16 +1,19 @@
-"""Sharded federated round engine (DESIGN.md §5, method hooks §6).
+"""Sharded federated round engine (DESIGN.md §5, method hooks §6,
+participation §9).
 
-ONE jit-compiled function runs a full federated round:
+ONE jit-compiled function runs a full federated round over a fixed-width
+COHORT of client slots (width = ``cfg.cohort_size`` — the engine never
+sees the logical population, fl/population.py):
 
     stacked <- broadcast(global)             # round start
     stacked, cstate <- vmap(method.client_update)(stacked, batches, cstate)
-    fused   <- method.fuse(stacked)          # the only cross-client op
+    fused   <- method.fuse(stacked)          # the only cross-cohort op
     sstate, global <- method.server_update(sstate, fused)
 
 parameterized by *placement*:
 
-  - ``mesh=None``   single host: the client axis is a plain vmapped batch.
-  - ``mesh=...``    the client axis is sharded over the mesh "data" axis
+  - ``mesh=None``   single host: the cohort axis is a plain vmapped batch.
+  - ``mesh=...``    the cohort axis is sharded over the mesh "data" axis
                     (launch/mesh.py); fusion is then a mean over a sharded
                     axis and lowers to ONE all-reduce — Fed2's structural
                     pre-alignment means paired averaging (Eq. 19) costs
@@ -21,8 +24,20 @@ registry via ``methods.get(cfg.method)``. The engine never branches on the
 method name — each method declares its hooks (client update, device fuse,
 optional host fuse, server step) and its persistent state:
 
-    state = {"server": <method server tree>, "clients": <stacked (N, ...)>}
-    state, new_global = round_fn(state, global_params, batches)
+    state = {"server": <method server tree>, "clients": <stacked (C, ...)>}
+    state, new_global = round_fn(state, global_params, batches, w, gw)
+
+Because cohorts are SAMPLED from the population each round, the per-slot
+fusion weights ``w`` (and fed2's presence rows ``gw``) are traced round
+arguments, not engine constants — fusion renormalizes them over the
+participants it sees, which keeps sampled fusion unbiased (DESIGN.md §9).
+
+For rounds whose participant set exceeds one cohort (cohort tiling), the
+engine additionally exposes the round split at the fuse boundary:
+``run_tile`` executes local phase + fuse for one cohort tile, and
+``finish_round`` applies the server step once to the tiles' combined
+fusion result (methods opt out via ``cohort_tiling = False`` when their
+server step reads per-client state).
 
 ``host_fusion`` methods (fedma) end the device program at the stacked
 client params; ``method.host_fuse`` completes the round on the host (that
@@ -52,7 +67,7 @@ PyTree = Any
 
 
 def _client_sharding(mesh, ndim: int) -> NamedSharding:
-    """Leading client axis on "data", everything else replicated."""
+    """Leading cohort axis on "data", everything else replicated."""
     return NamedSharding(mesh, P("data", *([None] * (ndim - 1))))
 
 
@@ -71,7 +86,7 @@ def resolve_use_kernel(use_kernel: bool | None, mesh) -> bool:
 def make_local_phase(task, cfg, opt: Optimizer,
                      method: FedMethod | None = None) -> Callable:
     """(stacked, batches, global_params) -> stacked after the local phase:
-    the method's stateless client_update vmapped over the client axis (the
+    the method's stateless client_update vmapped over the cohort axis (the
     decomposed reference for tests/benchmarks; stateful methods run their
     client state through the engine's round_fn instead)."""
     meth = method if method is not None else methods_lib.get(cfg.method)
@@ -80,7 +95,8 @@ def make_local_phase(task, cfg, opt: Optimizer,
             f"{meth.name} threads per-client state through its local "
             "phase; use make_round_engine (round_fn carries the state) "
             "instead of the stateless make_local_phase reference")
-    ctx = MethodContext(task=task, cfg=cfg, n_nodes=cfg.n_nodes,
+    ctx = MethodContext(task=task, cfg=cfg, population=cfg.population,
+                        cohort_size=cfg.cohort_size,
                         local_steps=cfg.local_epochs * cfg.steps_per_epoch,
                         opt=opt, weights=None, raw_weights=None,
                         group_axes=None, group_weights=None,
@@ -100,42 +116,98 @@ def make_local_phase(task, cfg, opt: Optimizer,
 
 @dataclasses.dataclass
 class RoundEngine:
-    """One federated round as one compiled function.
+    """One federated round as one compiled function over cohort slots.
 
     run_round threads the method's persistent state (``init_state`` builds
-    round-0 state from the global params):
+    round-0 state at cohort width for direct engine drives;
+    ``init_client_states(gp, n)`` stacks it at population width for a
+    Population):
 
-        state, new_global = engine.run_round(state, global_params, batches)
+        state, new_global = engine.run_round(state, global_params,
+                                             batches, weights=w,
+                                             group_weights=gw)
+
+    ``weights``/``group_weights`` are PER-ROUND: the sampled cohort's
+    sample weights (and fed2 presence rows) in slot order — fusion
+    renormalizes over them, so sampling stays unbiased.
 
     For host_fusion methods (fedma) the device round_fn returns the
     stacked client params and ``host_fuse`` completes the round on the
-    host (matching is not a device program)."""
-    n_nodes: int
+    host (matching is not a device program).
+
+    Cohort tiling (participants > cohort_size) drives ``run_tile`` per
+    tile and ``finish_round`` once — see fl/runtime.py."""
+    cohort_size: int
     mesh: Any
     method: FedMethod
     round_fn: Callable
+    tile_fn: Callable
+    server_fn: Callable
     eval_fn: Callable
     init_state: Callable
-    host_fuse: Callable | None = None
+    init_server_state: Callable
+    init_client_states: Callable
+    _host_fuse: Callable | None = None
+
+    @staticmethod
+    def _w32(w):
+        return None if w is None else jnp.asarray(w, jnp.float32)
+
+    def init_population_state(self, global_params: PyTree,
+                              population: int) -> PyTree:
+        """Stacked (population, ...) client state as HOST (numpy) arrays:
+        the persistent population state lives outside the jitted round,
+        so scatter_client_state can write cohort rows in place instead of
+        copying the whole population tree on device every round. Only ONE
+        client's state ever touches the device here — the population
+        stack is broadcast host-side (np.array makes it writable; device
+        buffers are read-only), so a million-client population is bounded
+        by host RAM, never accelerator memory."""
+        one = jax.tree_util.tree_map(
+            lambda l: np.asarray(l[0]),
+            self.init_client_states(global_params, 1))
+        return jax.tree_util.tree_map(
+            lambda l: np.array(
+                np.broadcast_to(l[None], (population,) + l.shape)), one)
 
     def run_round(self, state: PyTree, global_params: PyTree,
-                  batches: PyTree) -> tuple:
-        state, out = self.round_fn(state, global_params, batches)
-        if self.host_fuse is not None:
-            out = self.host_fuse(out)
+                  batches: PyTree, weights=None,
+                  group_weights=None) -> tuple:
+        state, out = self.round_fn(state, global_params, batches,
+                                   self._w32(weights),
+                                   self._w32(group_weights))
+        if self._host_fuse is not None:
+            out = self.host_fuse(out, weights)
         return state, out
+
+    def run_tile(self, client_states: PyTree, server_state: PyTree,
+                 global_params: PyTree, batches: PyTree, weights=None,
+                 group_weights=None) -> tuple:
+        """One cohort tile of a tiled round: local phase + fuse only.
+        Returns (new_client_states, fuse_out)."""
+        return self.tile_fn(client_states, server_state, global_params,
+                            batches, self._w32(weights),
+                            self._w32(group_weights))
+
+    def finish_round(self, server_state: PyTree, global_params: PyTree,
+                     fused: PyTree) -> tuple:
+        """The server step of a tiled round, applied once to the combined
+        fusion result. Only valid for ``method.cohort_tiling`` methods."""
+        return self.server_fn(server_state, global_params, fused)
+
+    def host_fuse(self, device_out: PyTree, weights=None) -> PyTree:
+        """Host-side fusion completion (host_fusion methods) with the
+        participants' weights."""
+        return self._host_fuse(device_out, weights)
 
 
 def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
-                      weights=None, group_weights=None,
                       use_kernel: bool | None = None,
                       method: FedMethod | None = None) -> RoundEngine:
-    """Build the engine for (task, cfg, method).
+    """Build the engine for (task, cfg, method) at width cfg.cohort_size.
 
     params_like: a params pytree or its eval_shape — only the tree structure
     and leaf shapes are read (to derive the group-axis tree).
-    weights: per-client sample weights (N,), fixed for the run.
-    group_weights: (N, G) presence weights for fed2's non-IID refinement.
     use_kernel: route fusion through the Pallas flatten-to-(N, M) fast path;
     default (None) = ``fusion.default_use_kernel()``. Forced off on
     multi-device meshes, where the tree reduction is the path that lowers
@@ -153,56 +225,92 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
             "stacked params — server_update/init_server_state never run; "
             "fold server-side work into host_fuse instead")
     opt = meth.local_opt(cfg)
-    n = cfg.n_nodes
+    n = cfg.cohort_size
     use_kernel = resolve_use_kernel(use_kernel, mesh)
-    w = None if weights is None else jnp.asarray(weights, jnp.float32)
-    gw = None if group_weights is None else jnp.asarray(group_weights,
-                                                        jnp.float32)
     ga = None
     if meth.uses_groups and task.group_axes_fn is not None:
         ga = task.group_axes_fn(params_like)
-    ctx = MethodContext(task=task, cfg=cfg, n_nodes=n,
+    ctx = MethodContext(task=task, cfg=cfg, population=cfg.population,
+                        cohort_size=n,
                         local_steps=cfg.local_epochs * cfg.steps_per_epoch,
-                        opt=opt, weights=w, raw_weights=weights,
-                        group_axes=ga, group_weights=gw,
+                        opt=opt, weights=None, raw_weights=None,
+                        group_axes=ga, group_weights=None,
                         use_kernel=use_kernel)
     meth.check(ctx)
 
-    def init_state(global_params):
-        server = meth.init_server_state(global_params, ctx)
-        one = meth.init_client_state(global_params, ctx)
-        clients = fusion_lib.broadcast_global(one, n)
-        return {"server": server, "clients": clients}
+    def init_server_state(global_params):
+        return meth.init_server_state(global_params, ctx)
 
-    def round_fn(state, global_params, batches):
+    def init_client_states(global_params, width):
+        one = meth.init_client_state(global_params, ctx)
+        return fusion_lib.broadcast_global(one, width)
+
+    def init_state(global_params):
+        return {"server": init_server_state(global_params),
+                "clients": init_client_states(global_params, n)}
+
+    def local_and_fuse(clients_state, server_state, global_params, batches,
+                       ctx_r):
+        """The shared cohort-tile body: broadcast -> vmapped local phase
+        -> device fuse (used by both round_fn and tile_fn so the two
+        compile the identical per-tile program)."""
         stacked = fusion_lib.broadcast_global(global_params, n)
         if mesh is not None:
             constrain = lambda t: jax.lax.with_sharding_constraint(  # noqa: E731
                 t, jax.tree_util.tree_map(
                     lambda l: _client_sharding(mesh, l.ndim), t))
             stacked = constrain(stacked)
-            state = dict(state, clients=constrain(state["clients"]))
+            clients_state = constrain(clients_state)
         stacked, new_clients = jax.vmap(
             lambda p, b, cs: meth.client_update(
-                p, b, global_params, cs, state["server"], ctx),
-            in_axes=(0, 0, 0))(stacked, batches, state["clients"])
-        fused = meth.fuse(stacked, global_params, ctx)
+                p, b, global_params, cs, server_state, ctx_r),
+            in_axes=(0, 0, 0))(stacked, batches, clients_state)
+        fused = meth.fuse(stacked, global_params, ctx_r)
+        return new_clients, fused
+
+    def round_fn(state, global_params, batches, weights, group_weights):
+        ctx_r = dataclasses.replace(ctx, weights=weights,
+                                    group_weights=group_weights)
+        new_clients, fused = local_and_fuse(
+            state["clients"], state["server"], global_params, batches,
+            ctx_r)
         if meth.host_fusion:
             return {"server": state["server"],
                     "clients": new_clients}, fused
         new_server, new_global = meth.server_update(
             state["server"], state["clients"], new_clients, global_params,
-            fused, ctx)
+            fused, ctx_r)
         return {"server": new_server, "clients": new_clients}, new_global
+
+    def tile_fn(clients_state, server_state, global_params, batches,
+                weights, group_weights):
+        ctx_r = dataclasses.replace(ctx, weights=weights,
+                                    group_weights=group_weights)
+        return local_and_fuse(clients_state, server_state, global_params,
+                              batches, ctx_r)
+
+    def server_fn(server_state, global_params, fused):
+        # tiled rounds: the server step sees no client states (methods
+        # that read them declare cohort_tiling = False and never get here)
+        return meth.server_update(server_state, (), (), global_params,
+                                  fused, ctx)
 
     host_fuse = None
     if meth.host_fusion:
-        host_fuse = lambda out: meth.host_fuse(out, ctx)  # noqa: E731
+        def host_fuse(out, weights):
+            ctx_h = ctx if weights is None else dataclasses.replace(
+                ctx, raw_weights=weights)
+            return meth.host_fuse(out, ctx_h)
 
-    return RoundEngine(n_nodes=n, mesh=mesh, method=meth,
+    return RoundEngine(cohort_size=n, mesh=mesh, method=meth,
                        round_fn=jax.jit(round_fn),
+                       tile_fn=jax.jit(tile_fn),
+                       server_fn=jax.jit(server_fn),
                        eval_fn=jax.jit(task.eval_fn),
-                       init_state=init_state, host_fuse=host_fuse)
+                       init_state=init_state,
+                       init_server_state=init_server_state,
+                       init_client_states=init_client_states,
+                       _host_fuse=host_fuse)
 
 
 # ---------------------------------------------------------------------------
@@ -215,18 +323,19 @@ def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int,
     """Lower one full round on ``mesh`` from ShapeDtypeStructs.
 
     batch_elems: per-sample batch element specs WITHOUT the leading
-    (clients, steps) axes, e.g. ``{"images": ((B, 32, 32, 3), jnp.float32),
+    (cohort, steps) axes, e.g. ``{"images": ((B, 32, 32, 3), jnp.float32),
     "labels": ((B,), jnp.int32)}``. use_kernel threads the caller's fusion
     fast-path choice to the engine (multi-device meshes still force it
     off). cfg's own step-count fields are overridden so that
     ``ctx.local_steps`` — which method numerics read (scaffold's K*lr,
     fednova's tau) — equals the ``local_steps`` the lowered round scans.
-    Returns the jax ``Lowered`` for
-    ``round_fn(state_specs, global_specs, batch_specs)``.
+    The per-round cohort weights lower as a replicated (cohort_size,)
+    f32 argument. Returns the jax ``Lowered`` for
+    ``round_fn(state_specs, global_specs, batch_specs, w_spec, None)``.
     """
     cfg = dataclasses.replace(cfg, local_epochs=1,
                               steps_per_epoch=local_steps)
-    n = cfg.n_nodes
+    n = cfg.cohort_size
     param_shapes = jax.eval_shape(task.init_fn, jax.random.PRNGKey(0))
     engine = make_round_engine(task, cfg, param_shapes, mesh=mesh,
                                use_kernel=use_kernel)
@@ -251,8 +360,10 @@ def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int,
             sharding=_client_sharding(mesh, 2 + len(shape)))
         for name, (shape, dtype) in batch_elems.items()
     }
+    wspec = jax.ShapeDtypeStruct((n,), jnp.float32,
+                                 sharding=NamedSharding(mesh, P()))
     with mesh:      # jax 0.4.x: Mesh is the context manager
-        return engine.round_fn.lower(sspecs, gspecs, bspecs)
+        return engine.round_fn.lower(sspecs, gspecs, bspecs, wspec, None)
 
 
 def stacked_param_bytes(task, n_clients: int) -> int:

@@ -7,19 +7,25 @@ into ONE jitted round and threads the method's persistent state
 
     state, new_global = round_fn(state, global_params, batches)
 
-Hook order inside a round (DESIGN.md §6):
+Hook order inside a round (DESIGN.md §6; participation §9):
 
     init_server_state / init_client_state   once, before round 0
+    gather_client_state                     sampled clients' population
+                                            rows -> cohort slots (host)
     client_update                           local phase (default: scan of
                                             local SGD steps adding
                                             local_loss_term), vmapped over
-                                            the client axis; per-client
+                                            the cohort axis; per-client
                                             state in and out
-    fuse                                    device-side aggregation
+    fuse                                    device-side aggregation over
+                                            the cohort
     server_update                           server-state step -> global
     host_fuse                               host_fusion methods only
                                             (fedma): completes the round
                                             on the host
+    scatter_client_state                    cohort slots -> population
+                                            rows (host); absentees keep
+                                            their state bit-for-bit
 
 `fedavg` is the all-defaults method; every other method overrides the
 smallest possible hook set: `fedprox` only `local_loss_term`, `fed2` only
@@ -38,6 +44,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fusion as fusion_lib
 
@@ -48,14 +55,21 @@ PyTree = Any
 class MethodContext:
     """Per-run context handed to every hook (built by make_round_engine).
 
-    weights: normalized-dtype (float32 jnp) per-client sample weights or
-    None; raw_weights keeps the caller's array (host_fuse consumers like
+    population: the number of LOGICAL clients behind the run
+    (fl/population.py); cohort_size: the fixed engine width — the number
+    of cohort slots the vmapped/sharded client axis holds. Hooks that
+    scale by participation (scaffold's server control update) read both;
+    nothing may assume the axis width equals the population.
+    weights: per-COHORT sample weights (float32 jnp, traced per round —
+    the sampled clients' weights in cohort-slot order) or None;
+    raw_weights keeps the host-side array (host_fuse consumers like
     fedma's matched averaging expect it untouched).
     group_axes: the task's GroupAxis tree (only when uses_groups).
     """
     task: Any
     cfg: Any
-    n_nodes: int
+    population: int
+    cohort_size: int
     local_steps: int
     opt: Any
     weights: jnp.ndarray | None
@@ -73,6 +87,11 @@ class FedMethod:
     uses_groups = False        # needs task.group_axes_fn (structural groups)
     host_fusion = False        # fuse completes on the host (fedma)
     client_stateful = False    # client_update reads per-client state
+    cohort_tiling = True       # round may split into fuse-only cohort
+    #                            tiles + one trailing server step; False
+    #                            when server_update reads per-client state
+    #                            (scaffold), which caps participants per
+    #                            round at cohort_size
 
     def local_opt(self, cfg):
         """The optimizer driving the local phase. Default: the config's
@@ -94,8 +113,34 @@ class FedMethod:
         return ()
 
     def init_client_state(self, params: PyTree, ctx: MethodContext) -> PyTree:
-        """ONE client's state tree; the engine stacks it to (N, ...)."""
+        """ONE client's state tree; stacked to (population, ...) by the
+        Population and to (cohort_size, ...) for direct engine drives."""
         return ()
+
+    # -- population <-> cohort state movement (fl/population.py) ------------
+
+    def gather_client_state(self, stacked: PyTree, ids) -> PyTree:
+        """Rows ``ids`` of the HOST (population, ...) state ->
+        (cohort, ...) slots (an O(cohort) copy; the jit boundary moves it
+        on-device). Override when state is not plainly row-indexable."""
+        return jax.tree_util.tree_map(lambda a: a[ids], stacked)
+
+    def scatter_client_state(self, stacked: PyTree, ids,
+                             new_states: PyTree) -> PyTree:
+        """Write cohort slots back into rows ``ids`` of the
+        (population, ...) state; untouched rows keep their values (a
+        client that sits a round out keeps its state bit-for-bit). The
+        population state lives host-side as numpy
+        (``RoundEngine.init_population_state``) so this is an IN-PLACE
+        O(cohort) row write — never an O(population) device copy."""
+        def put(a, new):
+            a = np.asarray(a)
+            if not a.flags.writeable:     # handed a device tree: copy once
+                a = np.array(a)
+            a[ids] = np.asarray(new)
+            return a
+
+        return jax.tree_util.tree_map(put, stacked, new_states)
 
     # -- local phase --------------------------------------------------------
 
@@ -250,10 +295,18 @@ class Scaffold(FedMethod):
     the stacked client axis through the vmapped local phase, c lives in the
     server state. The local phase runs momentum-FREE SGD: the option-II
     control update reads the mean local gradient off (x - y_i)/(K*lr),
-    which heavy-ball momentum would inflate by its amplification factor."""
+    which heavy-ball momentum would inflate by its amplification factor.
+
+    Participation: c_i lives in the POPULATION state (fl/population.py) —
+    a client that sits a round out keeps its variate untouched; the
+    server update scales by |S|/N (cohort/population), the paper's
+    partial-participation rule. ``cohort_tiling = False``: the server
+    control update reads the participating clients' state deltas, so one
+    round must fit one cohort (participants <= cohort_size)."""
     name = "scaffold"
     summary = "client/server control variates correct local drift"
     client_stateful = True
+    cohort_tiling = False
 
     def local_opt(self, cfg):
         from repro.optim.optimizers import sgd
@@ -289,10 +342,18 @@ class Scaffold(FedMethod):
 
     def server_update(self, server_state, client_states, new_client_states,
                       global_params, fused, ctx):
-        # c <- c + mean_i(c_i+ - c_i)   (full participation)
+        # c <- c + (|S|/N) mean_{i in S}(c_i+ - c_i); |S| = cohort slots,
+        # N = population. Full participation (|S| == N) keeps the factor
+        # out of the graph so the round stays bit-identical to the
+        # pre-participation engine.
+        scale = ctx.cohort_size / ctx.population
+        if scale == 1.0:
+            upd = lambda cl, old, new: cl + jnp.mean(new - old, axis=0)  # noqa: E731
+        else:
+            upd = lambda cl, old, new: cl + scale * jnp.mean(  # noqa: E731
+                new - old, axis=0)
         new_c = jax.tree_util.tree_map(
-            lambda cl, old, new: cl + jnp.mean(new - old, axis=0),
-            server_state["c"], client_states, new_client_states)
+            upd, server_state["c"], client_states, new_client_states)
         return {"c": new_c}, fused
 
 

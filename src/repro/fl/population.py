@@ -1,0 +1,192 @@
+"""Logical client population & participation (DESIGN.md §9).
+
+Fed2's fusion math is defined over the clients that PARTICIPATE in a
+round; real federated systems (and the paper's non-IID Dirichlet
+experiments) run with far more logical clients than ever train at once.
+This module decouples the two widths:
+
+- ``Population``: the P *logical* clients — per-client shard indices,
+  sample-count weights, optional (P, G) presence weights, and the
+  persistent per-client method state as stacked ``(P, ...)`` arrays that
+  live host-side, OUTSIDE the jitted round (scaffold control variates
+  belong to clients, not to cohort slots).
+- ``ClientSampler``: the participation strategy — which client ids train
+  in round r. Strategies are registered by name exactly like federated
+  methods (fl/methods.py): ``register`` / ``get`` / ``available()``;
+  ``FLConfig.sampler`` is validated against this registry.
+
+The round engine (fl/engine.py) always runs a fixed-width *cohort*
+(width = ``cohort_size``, sharded over the mesh "data" axis); the host
+loop (fl/runtime.py) gathers the sampled clients' state into cohort
+slots, runs the round, and scatters updated state back. When a sampler
+returns more participants than one cohort holds (``full`` participation
+with population > cohort_size), the round executes as multiple engine
+invocations — *cohort tiling* — whose fusion contributions accumulate in
+a running weighted sum (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Population:
+    """The P logical clients behind a federated run.
+
+    parts: per-client sample index arrays (the data shards).
+    weights: (P,) float64 sample counts, floored at 1 (the fusion weights
+    before per-cohort renormalization).
+    group_weights: optional (P, G) presence weights for fed2's non-IID
+    refinement (rows are gathered per cohort; paired_average renormalizes
+    columns over the participants it sees).
+    clients: stacked (P, ...) per-client method state trees as HOST
+    (numpy) arrays (``RoundEngine.init_population_state``) — persistent
+    across rounds, mutated only through ``scatter`` (in-place cohort-row
+    writes, O(cohort) per round regardless of P).
+    """
+    parts: list
+    weights: np.ndarray
+    group_weights: np.ndarray | None = None
+    clients: PyTree = ()
+
+    @classmethod
+    def from_parts(cls, parts, group_weights=None) -> "Population":
+        weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
+        gw = None if group_weights is None else np.asarray(group_weights,
+                                                           np.float64)
+        return cls(parts=list(parts), weights=weights, group_weights=gw)
+
+    @property
+    def size(self) -> int:
+        return len(self.parts)
+
+    def gather(self, method, ids) -> PyTree:
+        """Sampled clients' state rows -> cohort-slot stacked trees."""
+        return method.gather_client_state(self.clients, np.asarray(ids))
+
+    def scatter(self, method, ids, new_states) -> None:
+        """Write cohort slots back to the sampled clients' rows."""
+        self.clients = method.scatter_client_state(
+            self.clients, np.asarray(ids), new_states)
+
+
+# ---------------------------------------------------------------------------
+# Sampler registry (mirrors the fl/methods.py method registry)
+# ---------------------------------------------------------------------------
+
+
+class ClientSampler:
+    """Participation strategy: which client ids train in round r.
+
+    ``sample`` returns a 1-D int array of client ids. Strategies that
+    return exactly ``cohort_size`` ids run as one engine invocation;
+    longer id lists (``full`` over a large population) are executed by
+    cohort tiling in the host loop. ``full`` MUST NOT draw from ``rng`` —
+    the batch-packing rng stream then stays bit-identical to the
+    pre-sampling engine (the equivalence pin in tests/test_methods.py).
+    """
+
+    name: str = ""
+    summary: str = ""          # one line for the README sampler table
+    # how a cohort's fusion weights are built (the FedAvg sampling
+    # duality): "sample" = shard-size weights renormalized over the
+    # participants (full/uniform/round_robin); "uniform" = every
+    # participant contributes equally, because the sampling probability
+    # itself already encodes shard size (weighted). Using shard-size
+    # weights under shard-size sampling would double-count large shards.
+    fusion_weights: str = "sample"
+
+    def sample(self, round_idx: int, population: int, cohort_size: int,
+               rng: np.random.Generator, weights=None) -> np.ndarray:
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, type[ClientSampler]] = {}
+
+
+def register(cls: type[ClientSampler]) -> type[ClientSampler]:
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available() -> tuple[str, ...]:
+    """All registered sampler names, sorted (the canonical enumeration
+    for CLIs, the README sampler table, and FLConfig validation)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> ClientSampler:
+    """Resolve a fresh sampler instance by registry name."""
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown client sampler {name!r}; available: "
+            f"{', '.join(available())}") from None
+
+
+@register
+class FullParticipation(ClientSampler):
+    """Every client, every round. With population > cohort_size the host
+    loop tiles the population over cohort-width engine invocations."""
+    name = "full"
+    summary = "every client every round (cohort tiling past the width)"
+
+    def sample(self, round_idx, population, cohort_size, rng, weights=None):
+        return np.arange(population, dtype=np.int64)
+
+
+@register
+class UniformSampler(ClientSampler):
+    """cohort_size clients drawn uniformly without replacement."""
+    name = "uniform"
+    summary = "cohort_size clients uniformly, without replacement"
+
+    def sample(self, round_idx, population, cohort_size, rng, weights=None):
+        return np.sort(rng.choice(population, size=cohort_size,
+                                  replace=False)).astype(np.int64)
+
+
+@register
+class WeightedSampler(ClientSampler):
+    """Sampling probability proportional to shard size (weights), without
+    replacement — large-shard clients participate more often, and each
+    participant then contributes EQUALLY to fusion
+    (``fusion_weights = "uniform"``; weighting both the draw and the
+    average would double-count large shards)."""
+    name = "weighted"
+    summary = "probability proportional to shard size, w/o replacement"
+    fusion_weights = "uniform"
+
+    def sample(self, round_idx, population, cohort_size, rng, weights=None):
+        if weights is None:
+            p = None
+        else:
+            w = np.asarray(weights, np.float64)
+            p = w / w.sum()
+        return np.sort(rng.choice(population, size=cohort_size,
+                                  replace=False, p=p)).astype(np.int64)
+
+
+@register
+class RoundRobinSampler(ClientSampler):
+    """Deterministic cycling window: round r trains clients
+    [r*C, r*C + C) mod population. When C divides the population every
+    client participates exactly once per population/C rounds; otherwise
+    the window wraps mid-cycle and coverage stays cyclic but uneven over
+    short horizons."""
+    name = "round_robin"
+    summary = "deterministic cycling window over client ids"
+
+    def sample(self, round_idx, population, cohort_size, rng, weights=None):
+        start = (round_idx * cohort_size) % population
+        return ((start + np.arange(cohort_size)) % population).astype(
+            np.int64)

@@ -1,14 +1,32 @@
 """Federated learning runtime.
 
-Thin host loop over the sharded round engine (fl/engine.py): clients
-execute SIMULTANEOUSLY as a vmapped batch over stacked params, and one
-jitted function runs the whole round — broadcast, local SGD, fusion,
-server step (DESIGN.md §5). Pass ``mesh=`` to shard the client axis over
-the mesh "data" axis; leave it None for single-host vmap.
+Thin host loop over the sharded round engine (fl/engine.py), with the
+POPULATION decoupled from the engine width (DESIGN.md §9): a run has
+``cfg.population`` logical clients (fl/population.py — shard indices,
+sample weights, persistent per-client method state), of which a sampled
+cohort of ``cfg.cohort_size`` slots trains each round. The per-round
+flow:
+
+    ids   <- sampler.sample(round, population, cohort_size)
+    state <- population.gather(ids)            # rows -> cohort slots
+    state, global <- engine.run_round(state, global, batches, w[ids])
+    population.scatter(ids, state)             # slots -> rows
+
+Clients in a cohort execute SIMULTANEOUSLY as a vmapped batch over
+stacked params, and one jitted function runs the whole round —
+broadcast, local SGD, fusion, server step (DESIGN.md §5). Pass ``mesh=``
+to shard the cohort axis over the mesh "data" axis; leave it None for
+single-host vmap. When a round's participant set exceeds the cohort
+width (``sampler="full"`` with population > cohort_size), the round runs
+as multiple engine tiles whose fusion contributions accumulate in a
+running weighted sum — unbiased, because each tile's fuse is a weighted
+mean renormalized over its participants (§9).
 
 Methods come from the fl/methods.py registry (DESIGN.md §6) — see
-``methods.available()`` for the full set; ``FLConfig.method`` is validated
-against the registry at construction. The paper's comparison class:
+``methods.available()`` for the full set; samplers from the
+fl/population.py registry — see its ``available()``. Both
+``FLConfig.method`` and ``FLConfig.sampler`` are validated against their
+registries at construction. The paper's comparison class:
 
   fedavg   coordinate-based mean (Eq. 1), sample-weighted
   fedprox  fedavg + proximal local loss (mu/2 ||w - w_g||^2)
@@ -35,14 +53,18 @@ import numpy as np
 from repro.core import fusion as fusion_lib
 from repro.core import matching as matching_lib
 from repro.fl import methods as methods_lib
+from repro.fl import population as population_lib
 from repro.fl.engine import make_round_engine
+from repro.fl.population import Population
 
 PyTree = Any
 
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
-    n_nodes: int = 10
+    population: int = 10        # logical clients (fl/population.py)
+    cohort_size: int | None = None  # engine width; None -> population
+    sampler: str = "full"       # any name in population.available()
     rounds: int = 20
     local_epochs: int = 1
     steps_per_epoch: int = 10
@@ -61,6 +83,24 @@ class FLConfig:
             raise ValueError(
                 f"unknown federated method {self.method!r}; available: "
                 f"{', '.join(methods_lib.available())}")
+        if self.sampler not in population_lib.available():
+            raise ValueError(
+                f"unknown client sampler {self.sampler!r}; available: "
+                f"{', '.join(population_lib.available())}")
+        if self.cohort_size is None:
+            object.__setattr__(self, "cohort_size", self.population)
+        for field in ("rounds", "population", "cohort_size", "batch_size",
+                      "local_epochs", "steps_per_epoch"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                raise ValueError(
+                    f"FLConfig.{field} must be a positive int, got {v!r}")
+        if self.cohort_size > self.population:
+            raise ValueError(
+                f"FLConfig.cohort_size ({self.cohort_size}) must not "
+                f"exceed population ({self.population}): the cohort is "
+                "the fixed engine width a round's participants are "
+                "sampled into")
 
 
 @dataclasses.dataclass
@@ -74,9 +114,9 @@ class FLTask:
 
 
 def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
-    """Per round: (N, n_steps, B, ...) batch arrays, sampling with
-    replacement where a client's shard is short (empty shards index
-    sample 0)."""
+    """Per cohort tile: (C, n_steps, B, ...) batch arrays for the given
+    clients' shards, sampling with replacement where a shard is short
+    (empty shards index sample 0)."""
     per_client = []
     for idx in parts:
         steps = []
@@ -92,50 +132,180 @@ def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_client)
 
 
+def run_sampled_round(engine, pop: Population, method, server_state,
+                      global_params, ids, get_batch, n_steps, cfg, rng,
+                      uniform_weights: bool = False):
+    """Execute one round for participant ids — a single engine invocation
+    when the cohort holds them all, cohort tiling otherwise. Returns
+    (server_state, new_global); per-client state is gathered/scattered on
+    ``pop`` in place. uniform_weights: every participant contributes
+    equally to fusion (samplers whose draw probability already encodes
+    shard size — ``ClientSampler.fusion_weights``)."""
+    C = engine.cohort_size
+    ids = np.asarray(ids, np.int64)
+
+    def tile_inputs(tids):
+        """Pad a tile to cohort width (repeating the first participant at
+        zero weight) and assemble its weights/presence rows/batches."""
+        n_real = len(tids)
+        padded = np.concatenate(
+            [tids, np.full(C - n_real, tids[0], np.int64)])
+        w = (np.ones(C) if uniform_weights
+             else pop.weights[padded].copy())
+        w[n_real:] = 0.0
+        gw = None
+        if pop.group_weights is not None:
+            gw = pop.group_weights[padded].copy()
+            gw[n_real:] = 0.0
+        batches = _pack_client_batches([pop.parts[i] for i in padded],
+                                       get_batch, n_steps, cfg.batch_size,
+                                       rng)
+        return padded, w, gw, batches
+
+    if len(ids) == C:
+        _, w, gw, batches = tile_inputs(ids)
+        # whole population in one cohort in natural order: client state
+        # needs no slot remapping, so keep it device-resident across
+        # rounds (no host round-trip, no per-round sync) — the
+        # pre-participation behavior for client-stateful full runs
+        whole = C == pop.size and np.array_equal(ids, np.arange(C))
+        state = {"server": server_state,
+                 "clients": (pop.clients if whole
+                             else pop.gather(method, ids))}
+        state, new_global = engine.run_round(state, global_params, batches,
+                                             weights=w, group_weights=gw)
+        if whole:
+            pop.clients = state["clients"]
+        else:
+            pop.scatter(method, ids, state["clients"])
+        return state["server"], new_global
+
+    # ---- padded / tiled rounds: participants != cohort_size ---------------
+    if not method.cohort_tiling and not method.host_fusion:
+        # the server step aggregates over ALL cohort slots (scaffold's
+        # control-variate mean), so padded or tiled participant sets
+        # would pollute it — such methods need exactly cohort-width ids
+        raise ValueError(
+            f"{method.name}: server step reads the participating cohort "
+            f"slots (cohort_tiling=False), so a round needs exactly "
+            f"cohort_size participants — got {len(ids)} for "
+            f"cohort_size={C}; "
+            + ("raise cohort_size to hold all participants or use a "
+               "cohort-sized sampler (uniform/weighted/round_robin)"
+               if len(ids) > C else
+               "use a sampler that fills the cohort, or lower "
+               "cohort_size to the participant count"))
+    if pop.group_weights is not None:
+        raise ValueError(
+            "presence-weighted group fusion needs exactly one unpadded "
+            "cohort of participants: tiling renormalizes each group "
+            "column per tile, and padded slots would join a no-holder "
+            "column's uniform fallback — either biases Eq. 19. Got "
+            f"{len(ids)} participants for cohort_size={C}; "
+            + ("raise cohort_size to hold all participants or use a "
+               "cohort-sized sampler (uniform/weighted/round_robin)"
+               if len(ids) > C else
+               "use a sampler that fills the cohort, or lower "
+               "cohort_size to the participant count"))
+    acc, w_acc = None, 0.0
+    stacked_tiles = []              # host_fusion: stacked params per tile
+    for t0 in range(0, len(ids), C):
+        tids = ids[t0:t0 + C]
+        n_real = len(tids)
+        padded, w, gw, batches = tile_inputs(tids)
+        cstate = pop.gather(method, padded)
+        new_cstate, fuse_out = engine.run_tile(cstate, server_state,
+                                               global_params, batches,
+                                               weights=w,
+                                               group_weights=gw)
+        pop.scatter(method, tids, jax.tree_util.tree_map(
+            lambda a: a[:n_real], new_cstate))
+        if method.host_fusion:
+            stacked_tiles.append(jax.tree_util.tree_map(
+                lambda a: a[:n_real], fuse_out))
+            continue
+        s_t = float(w.sum())
+        scaled = jax.tree_util.tree_map(lambda l: l * s_t, fuse_out)
+        acc = scaled if acc is None else jax.tree_util.tree_map(
+            jnp.add, acc, scaled)
+        w_acc += s_t
+    if method.host_fusion:
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *stacked_tiles)
+        w_all = (np.ones(len(ids)) if uniform_weights
+                 else pop.weights[ids])
+        return server_state, engine.host_fuse(stacked, w_all)
+    fused = jax.tree_util.tree_map(lambda l: l / w_acc, acc)
+    return engine.finish_round(server_state, global_params, fused)
+
+
 def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
                   test_batches, *, log=None, class_counts=None,
                   group_spec=None, mesh=None, use_kernel=None) -> dict:
-    """parts: list of per-client index arrays; get_batch(sel)->batch dict;
-    test_batches: list of batch dicts for global eval.
+    """parts: list of cfg.population per-client index arrays;
+    get_batch(sel)->batch dict; test_batches: list of batch dicts for
+    global eval.
 
-    class_counts (N, C) + group_spec enable Eq. 19's non-IID refinement for
-    group-structured methods (fed2): group g fuses only across nodes that
-    hold g's classes (presence-weighted paired averaging).
+    class_counts (population, C) + group_spec enable Eq. 19's non-IID
+    refinement for group-structured methods (fed2): group g fuses only
+    across participants that hold g's classes (presence-weighted paired
+    averaging, rows gathered per cohort).
 
-    mesh: optional launch/mesh.py mesh — shards the client axis over "data".
+    mesh: optional launch/mesh.py mesh — shards the cohort axis over
+    "data".
     use_kernel: force the Pallas fusion fast path on/off (None = default).
 
-    Returns history {round, acc, wall, wall_total, final_params}. Per-round
-    ``wall`` entries are host DISPATCH timestamps (rounds execute
-    asynchronously unless ``log`` forces a sync); ``wall_total`` is the
-    true end-to-end time including the final materialization."""
+    Returns history {round, acc, wall, wall_total, participants,
+    final_params}. ``participants`` records the sampled client ids per
+    round. Per-round ``wall`` entries are host DISPATCH timestamps
+    (rounds execute asynchronously unless ``log`` forces a sync —
+    client-stateful methods under PARTIAL participation also sync on the
+    per-round state scatter); ``wall_total`` is the true end-to-end time
+    including the final materialization."""
+    if len(parts) != cfg.population:
+        raise ValueError(
+            f"run_federated got {len(parts)} client shards for "
+            f"FLConfig.population={cfg.population}; the partition defines "
+            "the logical population — partition with "
+            "n_clients=cfg.population or fix the config")
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     global_params = task.init_fn(key)
-    weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
     method = methods_lib.get(cfg.method)
+    sampler = population_lib.get(cfg.sampler)
     gw = None
     if method.uses_groups and class_counts is not None \
             and group_spec is not None:
         gw = fusion_lib.presence_group_weights(class_counts, group_spec)
+    pop = Population.from_parts(parts, group_weights=gw)
     engine = make_round_engine(task, cfg, global_params, mesh=mesh,
-                               weights=weights, group_weights=gw,
                                use_kernel=use_kernel, method=method)
-    state = engine.init_state(global_params)
+    server_state = engine.init_server_state(global_params)
+    pop.clients = engine.init_population_state(global_params, pop.size)
 
-    history = {"round": [], "acc": [], "wall": []}
+    history = {"round": [], "acc": [], "wall": [], "participants": []}
     n_steps = cfg.local_epochs * cfg.steps_per_epoch
     accs = []                      # device scalars; materialized at the end
     t0 = time.time()
+    uniform_w = sampler.fusion_weights == "uniform"
+    full_ids = None       # shared arange: full participation carries no
+    #                       per-round information, don't store it R times
     for r in range(cfg.rounds):
-        batches = _pack_client_batches(parts, get_batch, n_steps,
-                                       cfg.batch_size, rng)
-        state, global_params = engine.run_round(state, global_params,
-                                                batches)
+        ids = sampler.sample(r, cfg.population, cfg.cohort_size, rng,
+                             weights=pop.weights)
+        server_state, global_params = run_sampled_round(
+            engine, pop, method, server_state, global_params, ids,
+            get_batch, n_steps, cfg, rng, uniform_weights=uniform_w)
         acc = jnp.mean(jnp.stack([engine.eval_fn(global_params, tb)
                                   for tb in test_batches]))
         accs.append(acc)
         history["round"].append(r)
+        if len(ids) == cfg.population:
+            if full_ids is None:
+                full_ids = np.asarray(ids)
+            history["participants"].append(full_ids)
+        else:
+            history["participants"].append(np.asarray(ids))
         history["wall"].append(time.time() - t0)
         if log:                    # logging opts into the per-round sync
             log(f"round {r:3d} acc {float(acc):.4f}")

@@ -48,6 +48,7 @@ import traceback     # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.fl import methods as methods_lib                   # noqa: E402
+from repro.fl import population as population_lib             # noqa: E402
 from repro.fl.engine import (lower_round, resolve_use_kernel,  # noqa: E402
                              stacked_param_bytes)
 from repro.fl.runtime import FLConfig, cnn_task, lm_task      # noqa: E402
@@ -90,10 +91,13 @@ def _batch_elems(family: str, batch: int, seq: int) -> dict:
 
 def run_one(method: str, family: str, mesh, mesh_name: str, *,
             clients: int, local_steps: int, batch: int, seq: int,
-            outdir: str, use_kernel=None, verbose: bool = True) -> dict:
+            outdir: str, cohort_size=None, sampler: str = "full",
+            use_kernel=None, verbose: bool = True) -> dict:
     tag = f"fl_round_{method}_{family}_{mesh_name}"
     rec = {"kind": "fl_round", "method": method, "family": family,
-           "mesh": mesh_name, "clients": clients,
+           "mesh": mesh_name, "population": clients,
+           "cohort_size": clients if cohort_size is None else cohort_size,
+           "participation": sampler,
            "local_steps": local_steps, "batch": batch}
     meth = methods_lib.get(method)
     try:
@@ -109,7 +113,8 @@ def run_one(method: str, family: str, mesh, mesh_name: str, *,
             if verbose:
                 print(f"[skip] {tag}: {rec['reason']}")
             return rec
-        fl = FLConfig(n_nodes=clients, method=method)
+        fl = FLConfig(population=clients, cohort_size=cohort_size,
+                      sampler=sampler, method=method)
         t0 = time.time()
         lowered = lower_round(task, fl, mesh, _batch_elems(family, batch,
                                                            seq),
@@ -130,7 +135,9 @@ def run_one(method: str, family: str, mesh, mesh_name: str, *,
                     "output_bytes": mem.output_size_in_bytes},
             collectives=colls,
             host_matching=meth.host_fusion,
-            host_gather_bytes=(stacked_param_bytes(task, clients)
+            # per-round gather cost of the LOWERED round = cohort width
+            # (full participation over a larger population tiles this)
+            host_gather_bytes=(stacked_param_bytes(task, rec["cohort_size"])
                                if meth.host_fusion else 0))
         if verbose:
             busy = {k: round(v["bytes"] / 2**20, 1)
@@ -162,6 +169,7 @@ DEFAULT_OUT = os.path.normpath(os.path.join(
 def run_matrix(*, mesh_kind: str = "pod", methods=None,
                families=FAMILIES, clients: int = 16, local_steps: int = 4,
                batch: int = 32, seq: int = 64, outdir: str = DEFAULT_OUT,
+               cohort_size=None, sampler: str = "full",
                use_kernel=None, verbose: bool = True) -> list:
     methods = methods_lib.available() if methods is None else methods
     bad = [m for m in methods if m not in methods_lib.available()] + \
@@ -179,7 +187,8 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                          "(expected 'pod' or 'host')")
     return [run_one(m, f, mesh, mesh_name, clients=clients,
                     local_steps=local_steps, batch=batch, seq=seq,
-                    outdir=outdir, use_kernel=use_kernel, verbose=verbose)
+                    outdir=outdir, cohort_size=cohort_size, sampler=sampler,
+                    use_kernel=use_kernel, verbose=verbose)
             for f in families for m in methods]
 
 
@@ -191,7 +200,14 @@ def main():
                          f"{','.join(methods_lib.available())} or 'all'")
     ap.add_argument("--families", default="all",
                     help="comma list of cnn,lm or 'all'")
-    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--clients", type=int, default=16,
+                    help="logical client population")
+    ap.add_argument("--cohort-size", type=int, default=None,
+                    help="engine width (lowered round's client-axis "
+                         "width); default = --clients")
+    ap.add_argument("--sampler", default="full",
+                    choices=list(population_lib.available()),
+                    help="participation strategy recorded in the JSON")
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--seq", type=int, default=64)
@@ -213,6 +229,7 @@ def main():
                       families=families, clients=args.clients,
                       local_steps=args.local_steps, batch=args.batch,
                       seq=args.seq, outdir=args.out,
+                      cohort_size=args.cohort_size, sampler=args.sampler,
                       use_kernel=args.use_kernel)
     n_fail = sum(r["status"] == "error" for r in recs)
     print(f"done; {len(recs)} records, {n_fail} failures")

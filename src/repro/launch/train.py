@@ -11,6 +11,8 @@ Examples:
       --arch llama3.2-1b --reduced --steps 50 --batch 8 --seq 128
   PYTHONPATH=src python -m repro.launch.train --mode fl \
       --arch vgg9 --method fed2 --rounds 10 --nodes 6 --classes-per-node 5
+  PYTHONPATH=src python -m repro.launch.train --mode fl --nodes 64 \
+      --cohort-size 16 --sampler uniform          # partial participation
 """
 from __future__ import annotations
 
@@ -106,7 +108,8 @@ def run_fl(args):
 
     test_batches = [{"images": jnp.asarray(test.images),
                      "labels": jnp.asarray(test.labels)}]
-    fl = FLConfig(n_nodes=args.nodes, rounds=args.rounds,
+    fl = FLConfig(population=args.nodes, cohort_size=args.cohort_size,
+                  sampler=args.sampler, rounds=args.rounds,
                   local_epochs=args.local_epochs,
                   steps_per_epoch=args.steps_per_epoch,
                   batch_size=args.batch, lr=args.lr, momentum=0.9,
@@ -119,6 +122,7 @@ def run_fl(args):
 
 def main():
     from repro.fl import methods as methods_lib
+    from repro.fl import population as population_lib
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["lm", "fl"], default="fl")
@@ -130,7 +134,14 @@ def main():
                     choices=list(methods_lib.available()))
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--rounds", type=int, default=10)
-    ap.add_argument("--nodes", type=int, default=10)
+    ap.add_argument("--nodes", type=int, default=10,
+                    help="logical client population")
+    ap.add_argument("--cohort-size", type=int, default=None,
+                    help="engine width (participants per tile); default "
+                         "= the full population")
+    ap.add_argument("--sampler", default="full",
+                    choices=list(population_lib.available()),
+                    help="per-round participation strategy")
     ap.add_argument("--classes-per-node", type=int, default=5)
     ap.add_argument("--dirichlet", type=float, default=0.0)
     ap.add_argument("--local-epochs", type=int, default=1)

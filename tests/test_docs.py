@@ -16,8 +16,9 @@ def test_design_md_exists_with_cited_sections():
     assert (ROOT / "DESIGN.md").is_file()
     sections = _design_sections()
     # the sections the codebase cites (§6 = method protocol; the former
-    # §7 Data/§7.1 Synthetic renumbered to §8/§8.1 when §6 was inserted)
-    for must in ("3", "5", "6", "8.1", "Shape-applicability"):
+    # §7 Data/§7.1 Synthetic renumbered to §8/§8.1 when §6 was inserted;
+    # §9 = population & participation)
+    for must in ("3", "5", "6", "8.1", "9", "Shape-applicability"):
         assert must in sections, (must, sections)
 
 
@@ -44,6 +45,21 @@ def test_readme_method_table_matches_registry():
         row = f"| `{name}` |"
         assert row in readme, f"README method table misses {row}"
         assert meth.summary in readme, (name, meth.summary)
+
+
+def test_readme_sampler_table_matches_registry():
+    """The README sampler table is generated from the fl/population.py
+    registry: every registered sampler appears as a table row with its
+    summary line."""
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.fl import population
+    readme = (ROOT / "README.md").read_text()
+    for name in population.available():
+        smp = population.get(name)
+        row = f"| `{name}` |"
+        assert row in readme, f"README sampler table misses {row}"
+        assert smp.summary in readme, (name, smp.summary)
 
 
 def test_readme_quotes_tier1_verify():

@@ -30,7 +30,7 @@ _TEST_BATCHES = [{"images": jnp.asarray(_TEST.images),
 
 
 def _fl(method, rounds=2):
-    return FLConfig(n_nodes=3, rounds=rounds, local_epochs=1,
+    return FLConfig(population=3, rounds=rounds, local_epochs=1,
                     steps_per_epoch=2, batch_size=8, lr=0.02, momentum=0.9,
                     method=method, seed=0)
 
@@ -48,18 +48,18 @@ def test_engine_round_matches_decomposed_reference(method):
     fusion run as separate host-driven steps (the seed semantics)."""
     cfg, fl = _cfg(method), _fl(method, rounds=1)
     task = cnn_task(cfg)
-    parts = nxc_partition(_DS.labels, fl.n_nodes, 2, 4, seed=1)
+    parts = nxc_partition(_DS.labels, fl.population, 2, 4, seed=1)
     weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
     gp = task.init_fn(jax.random.PRNGKey(fl.seed))
     rng = np.random.default_rng(fl.seed)
     batches = _pack_client_batches(parts, _get_batch, 2, fl.batch_size, rng)
 
-    engine = make_round_engine(task, fl, gp, weights=weights,
-                               use_kernel=False)
-    _, got = engine.run_round(engine.init_state(gp), gp, batches)
+    engine = make_round_engine(task, fl, gp, use_kernel=False)
+    _, got = engine.run_round(engine.init_state(gp), gp, batches,
+                              weights=weights)
 
     local = make_local_phase(task, fl, sgd(fl.lr, fl.momentum))
-    stacked = fusion_lib.broadcast_global(gp, fl.n_nodes)
+    stacked = fusion_lib.broadcast_global(gp, fl.population)
     stacked = jax.jit(local)(stacked, batches, gp)
     if method == "fed2":
         want = fusion_lib.paired_average(stacked, task.group_axes_fn(gp),
@@ -75,7 +75,7 @@ def test_engine_kernel_fusion_round_matches_reference_round():
     """use_kernel=True inside the jitted round == reference fusion round."""
     cfg, fl = _cfg("fed2"), _fl("fed2", rounds=2)
     task = cnn_task(cfg)
-    parts = nxc_partition(_DS.labels, fl.n_nodes, 2, 4, seed=1)
+    parts = nxc_partition(_DS.labels, fl.population, 2, 4, seed=1)
     a = run_federated(task, fl, parts, _get_batch, _TEST_BATCHES,
                       use_kernel=False)
     b = run_federated(task, fl, parts, _get_batch, _TEST_BATCHES,
@@ -91,7 +91,7 @@ def test_engine_host_mesh_placement():
     the mesh "data" axis (1-device host mesh here)."""
     cfg, fl = _cfg("fed2"), _fl("fed2", rounds=2)
     task = cnn_task(cfg)
-    parts = nxc_partition(_DS.labels, fl.n_nodes, 2, 4, seed=1)
+    parts = nxc_partition(_DS.labels, fl.population, 2, 4, seed=1)
     mesh = make_host_mesh()
     with mesh:
         h = run_federated(task, fl, parts, _get_batch, _TEST_BATCHES,
@@ -103,7 +103,7 @@ def test_engine_host_mesh_placement():
 def test_engine_fedma_host_fuse():
     cfg, fl = _cfg("fedma"), _fl("fedma", rounds=1)
     task = cnn_task(cfg)
-    parts = nxc_partition(_DS.labels, fl.n_nodes, 2, 4, seed=1)
+    parts = nxc_partition(_DS.labels, fl.population, 2, 4, seed=1)
     h = run_federated(task, fl, parts, _get_batch, _TEST_BATCHES)
     assert np.isfinite(h["acc"][-1])
 

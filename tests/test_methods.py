@@ -36,7 +36,7 @@ _TEST_BATCHES = [{"images": jnp.asarray(_TEST.images),
 
 
 def _fl(method, rounds=2, momentum=0.9, **kw):
-    return FLConfig(n_nodes=3, rounds=rounds, local_epochs=1,
+    return FLConfig(population=3, rounds=rounds, local_epochs=1,
                     steps_per_epoch=2, batch_size=8, lr=0.02,
                     momentum=momentum, method=method, seed=0, **kw)
 
@@ -99,7 +99,7 @@ def _seed_round_fn(task, cfg, params_like, weights):
     cfg.method, single jitted broadcast -> vmapped local SGD -> fusion).
     fedma returns the stacked client params for host matching."""
     opt = sgd(cfg.lr, cfg.momentum)
-    n = cfg.n_nodes
+    n = cfg.population
     w = None if weights is None else jnp.asarray(weights, jnp.float32)
     ga = task.group_axes_fn(params_like) if cfg.method == "fed2" else None
 
@@ -142,12 +142,11 @@ def test_migration_equivalence_bit_identical(method):
     be BIT-IDENTICAL to the pre-refactor engine, for every paper method."""
     cfg, fl = _cfg(method), _fl(method)
     task = cnn_task(cfg)
-    parts = nxc_partition(_DS.labels, fl.n_nodes, 2, 4, seed=1)
+    parts = nxc_partition(_DS.labels, fl.population, 2, 4, seed=1)
     weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
     gp = task.init_fn(jax.random.PRNGKey(fl.seed))
 
-    engine = make_round_engine(task, fl, gp, weights=weights,
-                               use_kernel=False)
+    engine = make_round_engine(task, fl, gp, use_kernel=False)
     seed_round = _seed_round_fn(task, fl, gp, weights)
 
     state = engine.init_state(gp)
@@ -156,7 +155,8 @@ def test_migration_equivalence_bit_identical(method):
     for r in range(2):
         batches = _pack_client_batches(parts, _get_batch, 2, fl.batch_size,
                                        rng)
-        state, g_new = engine.run_round(state, g_new, batches)
+        state, g_new = engine.run_round(state, g_new, batches,
+                                        weights=weights)
         out = seed_round(g_old, batches)
         if method == "fedma":
             out = task.matched_average_fn(out, weights)
@@ -165,6 +165,77 @@ def test_migration_equivalence_bit_identical(method):
                         jax.tree_util.tree_leaves(g_old)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=f"{method} round {r}")
+
+
+def _baked_round_fn(task, cfg, params_like, weights, meth):
+    """The pre-POPULATION engine, verbatim: cohort width == population,
+    the run's sample weights baked into the method context as constants,
+    one jitted round threading {"server", "clients"} state — the
+    reference the sampled/tiled runtime must reproduce bit-for-bit under
+    sampler="full", cohort_size == population."""
+    opt = meth.local_opt(cfg)
+    n = cfg.population
+    w = jnp.asarray(weights, jnp.float32)
+    ga = task.group_axes_fn(params_like) if meth.uses_groups else None
+    ctx = methods.MethodContext(
+        task=task, cfg=cfg, population=n, cohort_size=n,
+        local_steps=cfg.local_epochs * cfg.steps_per_epoch, opt=opt,
+        weights=w, raw_weights=weights, group_axes=ga, group_weights=None,
+        use_kernel=False)
+
+    def init_state(gp):
+        one = meth.init_client_state(gp, ctx)
+        return {"server": meth.init_server_state(gp, ctx),
+                "clients": fusion_lib.broadcast_global(one, n)}
+
+    @jax.jit
+    def round_fn(state, gp, batches):
+        stacked = fusion_lib.broadcast_global(gp, n)
+        stacked, new_clients = jax.vmap(
+            lambda p, b, cs: meth.client_update(p, b, gp, cs,
+                                                state["server"], ctx),
+            in_axes=(0, 0, 0))(stacked, batches, state["clients"])
+        fused = meth.fuse(stacked, gp, ctx)
+        if meth.host_fusion:
+            return {"server": state["server"],
+                    "clients": new_clients}, fused
+        new_server, new_global = meth.server_update(
+            state["server"], state["clients"], new_clients, gp, fused, ctx)
+        return {"server": new_server, "clients": new_clients}, new_global
+
+    return init_state, round_fn
+
+
+@pytest.mark.parametrize("method", methods.available())
+def test_full_participation_equivalence_all_methods(method):
+    """The equivalence pin of the population redesign: sampler="full" with
+    cohort_size == population must be BIT-IDENTICAL to the pre-redesign
+    engine (baked weights, no gather/scatter) for EVERY registered
+    method — the whole sampled run_federated path included."""
+    cfg, fl = _cfg(method), _fl(method)
+    assert fl.sampler == "full" and fl.cohort_size == fl.population
+    task = cnn_task(cfg)
+    parts = nxc_partition(_DS.labels, fl.population, 2, 4, seed=1)
+    weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
+    gp = task.init_fn(jax.random.PRNGKey(fl.seed))
+    init_state, baked_round = _baked_round_fn(task, fl, gp, weights,
+                                              methods.get(method))
+
+    h = run_federated(task, fl, parts, _get_batch, _TEST_BATCHES)
+
+    state, g_old = init_state(gp), gp
+    rng = np.random.default_rng(fl.seed)
+    for r in range(fl.rounds):
+        batches = _pack_client_batches(parts, _get_batch, 2, fl.batch_size,
+                                       rng)
+        state, out = baked_round(state, g_old, batches)
+        if methods.get(method).host_fusion:
+            out = task.matched_average_fn(out, weights)
+        g_old = out
+    for a, b in zip(jax.tree_util.tree_leaves(h["final_params"]),
+                    jax.tree_util.tree_leaves(g_old)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=method)
 
 
 # ---------------------------------------------------------------------------
@@ -263,22 +334,21 @@ def test_scaffold_threads_control_variates():
     non-zero (state actually threads through the vmapped local phase)."""
     cfg, fl = _cfg("scaffold"), _fl("scaffold", rounds=1)
     task = cnn_task(cfg)
-    parts = nxc_partition(_DS.labels, fl.n_nodes, 2, 4, seed=1)
+    parts = nxc_partition(_DS.labels, fl.population, 2, 4, seed=1)
     weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
     gp = task.init_fn(jax.random.PRNGKey(0))
-    engine = make_round_engine(task, fl, gp, weights=weights,
-                               use_kernel=False)
+    engine = make_round_engine(task, fl, gp, use_kernel=False)
     state = engine.init_state(gp)
     batches = _pack_client_batches(parts, _get_batch, 2, fl.batch_size,
                                    np.random.default_rng(0))
-    state, _ = engine.run_round(state, gp, batches)
+    state, _ = engine.run_round(state, gp, batches, weights=weights)
     ci_mag = sum(float(jnp.sum(jnp.abs(l))) for l in
                  jax.tree_util.tree_leaves(state["clients"]))
     c_mag = sum(float(jnp.sum(jnp.abs(l))) for l in
                 jax.tree_util.tree_leaves(state["server"]))
     assert ci_mag > 0 and c_mag > 0
     leaf = jax.tree_util.tree_leaves(state["clients"])[0]
-    assert leaf.shape[0] == fl.n_nodes
+    assert leaf.shape[0] == fl.cohort_size
 
 
 # ---------------------------------------------------------------------------

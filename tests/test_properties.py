@@ -84,6 +84,36 @@ def test_dirichlet_partition_complete_and_disjoint(n_nodes, alpha):
 
 
 @SET
+@given(st.integers(1, 12), st.integers(1, 8), st.integers(2, 10),
+       st.integers(50, 500), st.integers(0, 2**31 - 1),
+       st.integers(0, 2**31 - 1))
+def test_partitions_assign_every_sample_exactly_once(
+        n_clients, cpn, n_classes, n_samples, label_seed, part_seed):
+    """Both partitioners must be a true PARTITION for random shapes and
+    seeds: every sample index lands on exactly one client (the Population
+    assumes shards are disjoint and complete). nxc needs enough class-set
+    capacity to cover every class (n_clients * cpn >= n_classes) — below
+    that, uncovered classes have no holder by construction."""
+    cpn = min(cpn, n_classes)
+    labels = np.random.default_rng(label_seed).integers(
+        0, n_classes, size=n_samples).astype(np.int32)
+
+    parts = dirichlet_partition(labels, n_clients, 0.5, n_classes,
+                                seed=part_seed)
+    assert len(parts) == n_clients
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate(parts)), np.arange(n_samples))
+
+    if n_clients * cpn < n_classes:
+        n_clients = -(-n_classes // cpn)         # raise to coverage floor
+    parts = nxc_partition(labels, n_clients, cpn, n_classes,
+                          seed=part_seed)
+    assert len(parts) == n_clients
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate(parts)), np.arange(n_samples))
+
+
+@SET
 @given(st.integers(1, 4), st.integers(1, 6), st.integers(1, 5),
        st.integers(1, 5))
 def test_grouped_matmul_property(g, k, n, m):

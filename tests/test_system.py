@@ -28,7 +28,7 @@ def _run(method, cfg, rounds=5):
     # fedma at ~0.28 on this tiny synthetic run; at 5 every method clears
     # 0.30 with margin (fedavg 0.50, fedprox 0.54, fedma 0.50, fed2 0.64)
     parts = nxc_partition(_DS.labels, 4, 2, 4, seed=1)
-    fl = FLConfig(n_nodes=4, rounds=rounds, local_epochs=1,
+    fl = FLConfig(population=4, rounds=rounds, local_epochs=1,
                   steps_per_epoch=4, batch_size=16, lr=0.02, momentum=0.9,
                   method=method, seed=0)
     return run_federated(cnn_task(cfg), fl, parts, _get_batch,
