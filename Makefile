@@ -3,11 +3,17 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke bench-infra bench-cohort dryrun-fl
+.PHONY: test test-claims smoke smoke-scenario scenarios bench-infra \
+	bench-cohort bench-eval dryrun-fl
 
 # the tier-1 gate (ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
+
+# tier-2: full-extent paper-claims convergence suite (DESIGN.md §10;
+# minutes on CPU, non-blocking in CI)
+test-claims:
+	$(PY) -m pytest -m paper_claims -q
 
 # lower+compile the sharded round engine on the 1-device host mesh:
 # exercises the mesh code path (sharding constraints, collective lowering)
@@ -20,9 +26,24 @@ smoke:
 dryrun-fl:
 	$(PY) -m repro.launch.fl_dryrun
 
+# one fed2-vs-fedavg scenario pair at reduced extent — the CI smoke for
+# the scenario/evaluation subsystem (writes scenario_*.json artifacts)
+SMOKE_SCENARIOS ?= nxc2_fed2,nxc2_fedavg
+smoke-scenario:
+	$(PY) -m repro.launch.scenarios --scenarios $(SMOKE_SCENARIOS) \
+	    --rounds 2 --train-size 600
+
+# the full registered scenario matrix, full extent (DESIGN.md §10)
+scenarios:
+	$(PY) -m repro.launch.scenarios --scenarios all
+
 # host-loop rounds/sec vs population at fixed cohort (DESIGN.md §9)
 bench-cohort:
 	$(PY) benchmarks/flbench.py bench_cohort
+
+# sharded tiled eval engine vs seed host loop (DESIGN.md §10)
+bench-eval:
+	$(PY) benchmarks/flbench.py bench_eval
 
 bench-infra:
 	REPRO_BENCH_SET=infra $(PY) -m benchmarks.run

@@ -328,14 +328,73 @@ def bench_cohort(*, populations=(16, 64, 256), cohort=8, rounds=None,
     return recs
 
 
+def bench_eval(*, n_eval=4096, eval_batches=(128, 512), repeats=None) \
+        -> list:
+    """Evaluation throughput: the jitted tiled engine (fl/evaluation.py
+    — ONE dispatch over the staged tiles, confusion counts included) vs
+    the seed host loop (one jit dispatch per eval batch, mean of
+    per-batch accuracies) on the same staged eval set, per tile width.
+    Both warmed up; accuracies must agree (equal-width batches)."""
+    import jax
+    from repro.fl import evaluation as evaluation_lib
+
+    repeats = repeats or (10 if QUICK else 30)
+    cfg = model_cfg("vgg9", "fedavg")
+    task = cnn_task(cfg)
+    params = task.init_fn(jax.random.PRNGKey(0))
+    test = make_image_dataset(n_eval, n_classes=N_CLASSES, seed=99,
+                              noise=NOISE)
+    recs = []
+    for eb in eval_batches:
+        batches = [{"images": jnp.asarray(test.images[s:s + eb]),
+                    "labels": jnp.asarray(test.labels[s:s + eb])}
+                   for s in range(0, n_eval, eb)]
+        eval_jit = jax.jit(task.eval_fn)
+        ref = evaluation_lib.host_loop_eval(eval_jit, params, batches)
+        jax.block_until_ready(ref)                          # compile
+        t0 = time.time()
+        for _ in range(repeats):
+            out = evaluation_lib.host_loop_eval(eval_jit, params, batches)
+        jax.block_until_ready(out)
+        host_s = time.time() - t0
+
+        engine = evaluation_lib.make_eval_engine(task.predict_fn,
+                                                 N_CLASSES)
+        tiles = evaluation_lib.stage(batches, tile=eb)
+        conf = engine.run(params, tiles)
+        jax.block_until_ready(conf)                         # compile
+        t0 = time.time()
+        for _ in range(repeats):
+            conf = engine.run(params, tiles)
+        jax.block_until_ready(conf)
+        engine_s = time.time() - t0
+
+        acc = evaluation_lib.accuracy(np.asarray(conf))
+        recs.append({
+            "eval_batch": eb, "n_eval": n_eval, "repeats": repeats,
+            "host_loop_s": round(host_s, 3),
+            "engine_s": round(engine_s, 3),
+            "host_evals_per_s": round(repeats / host_s, 3),
+            "engine_evals_per_s": round(repeats / engine_s, 3),
+            "speedup": round(host_s / engine_s, 3),
+            "engine_acc": round(acc, 6),
+            "host_acc": round(float(ref), 6),
+            "acc_match": bool(abs(acc - float(ref)) < 1e-6)})
+    os.makedirs(ARTIFACTS_PERF, exist_ok=True)
+    with open(os.path.join(ARTIFACTS_PERF, "flbench_eval.json"),
+              "w") as f:
+        json.dump(recs, f, indent=1)
+    return recs
+
+
 BENCHES = {"bench_engine": None, "bench_methods": None,
-           "bench_cohort": None}   # CLI subcommand names
+           "bench_cohort": None, "bench_eval": None}  # CLI subcommands
 
 
 def main(argv=None):
     import sys
     chosen = (argv if argv is not None else sys.argv[1:]) or \
-        ["bench_engine", "bench_methods", "bench_cohort"]
+        ["bench_engine", "bench_methods", "bench_cohort", "bench_eval"]
     bad = [c for c in chosen if c not in BENCHES]
     if bad:
         raise SystemExit(f"unknown bench {bad}; available: "
@@ -355,6 +414,12 @@ def main(argv=None):
             print(f"fl_cohort_pop{r['population']},{r['us_per_round']},"
                   f"rounds_per_s={r['rounds_per_s']},"
                   f"cohort={r['cohort_size']}")
+    if "bench_eval" in chosen:
+        for r in bench_eval():
+            print(f"fl_eval_b{r['eval_batch']},"
+                  f"{round(1e6 * r['engine_s'] / r['repeats'])},"
+                  f"speedup_vs_host_loop={r['speedup']:.2f}x,"
+                  f"acc_match={r['acc_match']}")
 
 
 if __name__ == "__main__":

@@ -75,12 +75,25 @@ def main():
               f"{fl.cohort_size}, sampler {fl.sampler}) ===")
         h = run_federated(cnn_task(cfg), fl, parts, get_batch, test_batches,
                           log=print, mesh=mesh)
-        results[method] = h["acc"]
+        results[method] = h
 
     print("\nmethod, best_acc, final_acc, acc_curve")
-    for m, accs in results.items():
+    for m, h in results.items():
+        accs = h["acc"]
         print(f"{m}, {max(accs):.4f}, {accs[-1]:.4f}, "
               f"{['%.3f' % a for a in accs]}")
+
+    # final-round per-group accuracy (fl/evaluation.py confusion counts):
+    # group g is scored over the eval samples whose label is in its
+    # logit signature — Eq. 19's pairing key
+    from repro.core.grouping import GroupSpec
+    from repro.fl.evaluation import group_accuracy
+    spec = GroupSpec.contiguous(5, 10)
+    print("\nper-group accuracy (final round, groups of "
+          f"{10 // 5} classes):")
+    for m, h in results.items():
+        ga = group_accuracy(h["confusion"][-1], spec)
+        print(f"{m}, {['%.3f' % a for a in ga]}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,4 @@
 """VGG9 (FedMA variant) on CIFAR-10 — the paper's primary testbed."""
-import jax.numpy as jnp
-
 from repro.models.cnn import CNNConfig, VGG9_PLAN
 
 

@@ -6,9 +6,13 @@ noise, intra-class variation) make FedAvg-vs-Fed2 orderings measurable at
 laptop scale. Images are class prototypes (low-frequency random patterns)
 composed with instance-specific affine jitter + noise.
 
-Partitioners implement the paper's two heterogeneity protocols:
+Partitioners implement the paper's two heterogeneity protocols plus the
+scenario matrix's control protocols (fl/scenarios.py, DESIGN.md §10):
   - ``nxc_partition``: N nodes x C classes each (Tables 1-2)
   - ``dirichlet_partition``: p_c ~ Dir_J(alpha) (Fig. 6-7, alpha = 0.5)
+  - ``iid_partition``: uniform shuffle-split (the IID control)
+  - ``quantity_partition``: label-IID shards with Dir(alpha)-skewed
+    SIZES (quantity skew: heterogeneous how-much, homogeneous what)
 
 Also: a synthetic token-domain LM corpus (per-domain Markov chains over
 vocab clusters) for the beyond-paper federated LM experiments.
@@ -102,11 +106,44 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int,
     return [np.concatenate(p) for p in parts]
 
 
+def iid_partition(labels: np.ndarray, n_clients: int,
+                  seed: int = 0) -> list[np.ndarray]:
+    """IID control: a uniform shuffle split into n_clients equal shards."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(labels))
+    return [np.sort(p) for p in np.array_split(order, n_clients)]
+
+
+def quantity_partition(labels: np.ndarray, n_clients: int,
+                       alpha: float = 0.5,
+                       seed: int = 0) -> list[np.ndarray]:
+    """Quantity skew: shard SIZES follow Dir(alpha) proportions while the
+    label distribution stays IID per shard (every client sees every
+    class, some clients see far less data). The size-only counterpart of
+    ``dirichlet_partition``'s label skew."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(labels))
+    props = rng.dirichlet(alpha * np.ones(n_clients))
+    cuts = (np.cumsum(props)[:-1] * len(order)).astype(int)
+    return [np.sort(p) for p in np.split(order, cuts)]
+
+
 def batches(ds: ImageDataset, idx: np.ndarray, batch_size: int, seed: int,
             epochs: int = 1):
-    """Yield {'images', 'labels'} minibatches over ``idx`` for ``epochs``."""
+    """Yield {'images', 'labels'} minibatches over ``idx`` for ``epochs``.
+
+    A shard SMALLER than ``batch_size`` (routine under
+    ``dirichlet_partition`` with small alpha) still yields one
+    full-width batch per epoch, sampled with replacement — the seed
+    version yielded nothing, silently skipping the client."""
     rng = np.random.default_rng(seed)
+    if len(idx) == 0:
+        return
     for _ in range(epochs):
+        if len(idx) < batch_size:
+            sel = idx[rng.integers(0, len(idx), size=batch_size)]
+            yield {"images": ds.images[sel], "labels": ds.labels[sel]}
+            continue
         order = rng.permutation(len(idx))
         for s in range(0, len(order) - batch_size + 1, batch_size):
             sel = idx[order[s:s + batch_size]]

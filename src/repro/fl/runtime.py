@@ -39,6 +39,12 @@ fednova, fedavgm, fedadam — fl/methods.py docstrings).
 The host never blocks on device values inside the round loop: batches are
 staged ahead, eval results stay device-resident, and accuracies are
 materialized once after the last round (or lazily when ``log`` is given).
+Evaluation runs through the jitted tiled engine of fl/evaluation.py
+(DESIGN.md §10) — one dispatch over the staged eval tiles per round
+instead of the seed's per-batch host loop (kept as
+``evaluation.host_loop_eval``, the reference the engine is pinned
+against); tasks that carry ``n_classes`` additionally get per-round
+confusion counts for free.
 """
 from __future__ import annotations
 
@@ -52,6 +58,7 @@ import numpy as np
 
 from repro.core import fusion as fusion_lib
 from repro.core import matching as matching_lib
+from repro.fl import evaluation as evaluation_lib
 from repro.fl import methods as methods_lib
 from repro.fl import population as population_lib
 from repro.fl.engine import make_round_engine
@@ -111,6 +118,11 @@ class FLTask:
     eval_fn: Callable[[PyTree, dict], jnp.ndarray]   # -> accuracy
     group_axes_fn: Callable[[PyTree], PyTree] | None = None  # fed2
     matched_average_fn: Callable | None = None               # fedma
+    # fl/evaluation.py engine hooks: (params, batch) -> (pred, gold,
+    # weight); None falls back to the eval_fn host loop. n_classes opts
+    # into (C, C) confusion counts (None for LM tasks, where C = vocab).
+    predict_fn: Callable[[PyTree, dict], tuple] | None = None
+    n_classes: int | None = None
 
 
 def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
@@ -256,12 +268,18 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     use_kernel: force the Pallas fusion fast path on/off (None = default).
 
     Returns history {round, acc, wall, wall_total, participants,
-    final_params}. ``participants`` records the sampled client ids per
-    round. Per-round ``wall`` entries are host DISPATCH timestamps
-    (rounds execute asynchronously unless ``log`` forces a sync —
-    client-stateful methods under PARTIAL participation also sync on the
-    per-round state scatter); ``wall_total`` is the true end-to-end time
-    including the final materialization."""
+    final_params} — plus, when the task carries ``predict_fn`` and
+    ``n_classes``, per-round ``confusion`` (C, C) count matrices and
+    ``per_class_acc`` rows from the tiled eval engine (DESIGN.md §10).
+    ``acc`` is then the pooled (example-weighted) accuracy over the eval
+    set; without ``predict_fn`` the seed per-batch host loop
+    (``evaluation.host_loop_eval``) supplies the mean-of-batch
+    accuracies as before. ``participants`` records the sampled client
+    ids per round. Per-round ``wall`` entries are host DISPATCH
+    timestamps (rounds execute asynchronously unless ``log`` forces a
+    sync — client-stateful methods under PARTIAL participation also sync
+    on the per-round state scatter); ``wall_total`` is the true
+    end-to-end time including the final materialization."""
     if len(parts) != cfg.population:
         raise ValueError(
             f"run_federated got {len(parts)} client shards for "
@@ -283,9 +301,16 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     server_state = engine.init_server_state(global_params)
     pop.clients = engine.init_population_state(global_params, pop.size)
 
+    eval_engine, eval_tiles = None, None
+    if task.predict_fn is not None:
+        eval_engine = evaluation_lib.make_eval_engine(
+            task.predict_fn, task.n_classes, mesh=mesh)
+        eval_tiles = evaluation_lib.stage(test_batches,
+                                          tile=cfg.eval_batch, mesh=mesh)
+
     history = {"round": [], "acc": [], "wall": [], "participants": []}
     n_steps = cfg.local_epochs * cfg.steps_per_epoch
-    accs = []                      # device scalars; materialized at the end
+    counts = []                    # device arrays; materialized at the end
     t0 = time.time()
     uniform_w = sampler.fusion_weights == "uniform"
     full_ids = None       # shared arange: full participation carries no
@@ -296,9 +321,12 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
         server_state, global_params = run_sampled_round(
             engine, pop, method, server_state, global_params, ids,
             get_batch, n_steps, cfg, rng, uniform_weights=uniform_w)
-        acc = jnp.mean(jnp.stack([engine.eval_fn(global_params, tb)
-                                  for tb in test_batches]))
-        accs.append(acc)
+        if eval_engine is not None:
+            c = eval_engine.run(global_params, eval_tiles)
+        else:
+            c = evaluation_lib.host_loop_eval(engine.eval_fn,
+                                              global_params, test_batches)
+        counts.append(c)
         history["round"].append(r)
         if len(ids) == cfg.population:
             if full_ids is None:
@@ -308,11 +336,23 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
             history["participants"].append(np.asarray(ids))
         history["wall"].append(time.time() - t0)
         if log:                    # logging opts into the per-round sync
-            log(f"round {r:3d} acc {float(acc):.4f}")
-    history["acc"] = [float(a) for a in accs]
+            log(f"round {r:3d} acc {_count_acc(c):.4f}")
+    if eval_engine is not None and task.n_classes is not None:
+        conf = [np.asarray(c) for c in counts]
+        history["confusion"] = conf
+        history["per_class_acc"] = [evaluation_lib.per_class_accuracy(c)
+                                    for c in conf]
+    history["acc"] = [_count_acc(c) for c in counts]
     history["wall_total"] = time.time() - t0
     history["final_params"] = global_params
     return history
+
+
+def _count_acc(c) -> float:
+    """Accuracy from one per-round eval result: a host-loop scalar, a
+    (correct, total) pair, or a confusion matrix."""
+    c = np.asarray(c)
+    return float(c) if c.ndim == 0 else evaluation_lib.accuracy(c)
 
 
 # ---------------------------------------------------------------------------
@@ -321,7 +361,12 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
 
 
 def cnn_task(model_cfg) -> FLTask:
-    from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+    from repro.models.cnn import apply_cnn, cnn_accuracy, cnn_loss, init_cnn
+
+    def predict(params, batch):
+        logits = apply_cnn(params, model_cfg, batch["images"])
+        return (jnp.argmax(logits, -1), batch["labels"],
+                jnp.ones(batch["labels"].shape, jnp.float32))
 
     return FLTask(
         init_fn=lambda k: init_cnn(k, model_cfg),
@@ -330,23 +375,33 @@ def cnn_task(model_cfg) -> FLTask:
         group_axes_fn=lambda p: fusion_lib.cnn_group_axes(p, model_cfg),
         matched_average_fn=lambda s, w: matching_lib.matched_average(
             s, model_cfg, w),
+        predict_fn=predict,
+        n_classes=model_cfg.n_classes,
     )
 
 
 def lm_task(model_cfg) -> FLTask:
     from repro.models.forward import lm_loss
 
-    def accuracy(params, batch):
-        # next-token top-1 accuracy as the LM "accuracy" analog
+    def logits_fn(params, batch):
         from repro.models.forward import forward
         from repro.models.transformer import unembed_apply
         h, _ = forward(params, model_cfg, batch["tokens"])
         table = params["embed"]["table"] if model_cfg.tie_embeddings else None
-        logits = unembed_apply(params.get("unembed"), h, model_cfg, table)
-        pred = jnp.argmax(logits, -1)
+        return unembed_apply(params.get("unembed"), h, model_cfg, table)
+
+    def accuracy(params, batch):
+        # next-token top-1 accuracy as the LM "accuracy" analog
+        pred = jnp.argmax(logits_fn(params, batch), -1)
         m = batch["mask"]
         return jnp.sum((pred == batch["labels"]) * m) / jnp.maximum(
             jnp.sum(m), 1)
+
+    def predict(params, batch):
+        # per-position preds; confusion stays off (n_classes=None: the
+        # "classes" are the vocab — a vocab^2 count matrix is not useful)
+        pred = jnp.argmax(logits_fn(params, batch), -1)
+        return pred, batch["labels"], batch["mask"]
 
     from repro.models.transformer import init_params
     return FLTask(
@@ -355,4 +410,6 @@ def lm_task(model_cfg) -> FLTask:
         eval_fn=accuracy,
         group_axes_fn=lambda p: fusion_lib.lm_group_axes(p, model_cfg),
         matched_average_fn=None,
+        predict_fn=predict,
+        n_classes=None,
     )

@@ -4,12 +4,10 @@ on real TPU set REPRO_PALLAS_COMPILE=1.
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.feature_stats import feature_stats_kernel
 from repro.kernels.grouped_matmul import grouped_matmul_kernel

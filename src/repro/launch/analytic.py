@@ -18,10 +18,7 @@ Conventions (global, fwd):
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.shapes import InputShape

@@ -17,8 +17,6 @@ Scheme (Megatron-style tensor parallel on axis "model", batch on
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -1,8 +1,6 @@
 """jit-able train / serve steps shared by the real launcher and the dry-run."""
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

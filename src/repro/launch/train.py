@@ -21,7 +21,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def run_lm(args):
@@ -68,6 +67,17 @@ def run_fl(args):
                                       make_image_dataset, nxc_partition)
     from repro.fl import methods as methods_lib
     from repro.fl.runtime import FLConfig, cnn_task, run_federated
+
+    if args.scenario:
+        # a registered scenario IS the full run config — everything else
+        # on the command line is pinned by the spec (fl/scenarios.py)
+        from repro.fl import scenarios as scenarios_lib
+        spec = scenarios_lib.get(args.scenario)
+        rec = scenarios_lib.run_scenario(spec, log=print)
+        print(f"scenario {spec.name} ({spec.protocol_label()}, "
+              f"{spec.method}): final acc {rec.final_acc:.4f}, "
+              f"best {rec.best_acc:.4f}")
+        return rec
 
     if args.dry_run:
         # lower (don't run) one engine round on the 1-device host mesh —
@@ -132,6 +142,11 @@ def main():
     ap.add_argument("--fed2-groups", type=int, default=8)
     ap.add_argument("--method", default="fed2",
                     choices=list(methods_lib.available()))
+    ap.add_argument("--scenario", default="",
+                    help="fl mode: run a registered scenario from "
+                         "fl/scenarios.py verbatim (see python -m "
+                         "repro.launch.scenarios --list); overrides the "
+                         "per-knob flags")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--nodes", type=int, default=10,
@@ -161,6 +176,8 @@ def main():
     args = ap.parse_args()
     if args.dry_run and args.mode != "fl":
         ap.error("--dry-run is only supported with --mode fl")
+    if args.scenario and args.mode != "fl":
+        ap.error("--scenario is only supported with --mode fl")
     (run_lm if args.mode == "lm" else run_fl)(args)
 
 

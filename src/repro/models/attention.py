@@ -15,7 +15,6 @@ Decode paths consume a KV cache:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -63,7 +63,6 @@ def forward(params, cfg: ModelConfig, tokens, *, embeds=None, positions=None):
         kind = tfm._default_kind(cfg)
         if "pre_blocks" in params:
             dcfg = dataclasses.replace(cfg, d_ff=cfg.moe_dense_ff)
-            pre_kind = "attn_ffn" if not cfg.mla_cfg else "mla_dense"
             apply_pre = functools.partial(_apply_pre_block, cfg=dcfg,
                                           positions=positions,
                                           mla=cfg.mla_cfg is not None)
@@ -146,7 +145,6 @@ def _forward_encdec(params, cfg: ModelConfig, tokens, frames):
     """whisper: frames (B, enc_frames, d) stubbed conv-frontend output."""
     ecfg = dataclasses.replace(cfg, norm="layernorm", act="gelu", window=None,
                                use_rope=False)
-    b = frames.shape[0]
     x = frames.astype(cfg.dtype) + params["enc_pos"]["table"][None]
     enc_pos = jnp.arange(cfg.enc_frames)
 
@@ -297,7 +295,6 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
         kind = tfm._default_kind(cfg)
         if "pre_blocks" in params:
             dcfg = dataclasses.replace(cfg, d_ff=cfg.moe_dense_ff)
-            pk = "mla_dense" if cfg.mla_cfg else "attn_ffn"
             x, nc = _scan_decode(
                 params["pre_blocks"], cache["pre_blocks"], x,
                 lambda p, h, c: _pre_block_decode(p, h, c, dcfg, pos))

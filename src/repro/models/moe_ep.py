@@ -18,8 +18,6 @@ moe.moe_apply_dense_reference up to capacity drops (tests).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -14,7 +14,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.layers import (conv1d_depthwise_apply, conv1d_depthwise_init,
                                  dense_apply, dense_init, rmsnorm_apply,

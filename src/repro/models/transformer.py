@@ -31,7 +31,7 @@ import numpy as np
 from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
-from repro.models.layers import (dense_apply, dense_init, embed_apply,
+from repro.models.layers import (dense_apply, dense_init,
                                  embed_init, gelu, grouped_dense_apply,
                                  grouped_dense_init, layernorm_apply,
                                  layernorm_init, rmsnorm_apply, rmsnorm_init,

@@ -1,7 +1,6 @@
 """Minimal optimizer library (pytree-pure, optax-style (init, update))."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -1,0 +1,111 @@
+"""data/synthetic.py: partitioner determinism + coverage invariants, and
+the short-shard batches() regression (DESIGN.md §8.1)."""
+import numpy as np
+
+from repro.data.synthetic import (batches, dirichlet_partition,
+                                  iid_partition, make_image_dataset,
+                                  make_token_dataset, nxc_partition,
+                                  quantity_partition)
+
+
+def _assert_exact_cover(parts, n):
+    """Every part is a valid (possibly empty) index array and the union
+    covers all n samples exactly once."""
+    for p in parts:
+        assert isinstance(p, np.ndarray) and p.ndim == 1
+        assert np.issubdtype(p.dtype, np.integer)
+        if len(p):
+            assert p.min() >= 0 and p.max() < n
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    np.testing.assert_array_equal(np.sort(allidx), np.arange(n))
+
+
+class TestTokenDatasetDeterminism:
+    def test_same_seed_bit_identical(self):
+        a_toks, a_dom = make_token_dataset(64, 32, 256, seed=7)
+        b_toks, b_dom = make_token_dataset(64, 32, 256, seed=7)
+        np.testing.assert_array_equal(a_toks, b_toks)
+        np.testing.assert_array_equal(a_dom, b_dom)
+
+    def test_different_seeds_differ(self):
+        a_toks, _ = make_token_dataset(64, 32, 256, seed=7)
+        b_toks, _ = make_token_dataset(64, 32, 256, seed=8)
+        assert not np.array_equal(a_toks, b_toks)
+
+
+class TestDirichletPartition:
+    LABELS = make_image_dataset(400, n_classes=10, seed=0).labels
+
+    def test_same_seed_bit_identical(self):
+        a = dirichlet_partition(self.LABELS, 8, 0.5, 10, seed=3)
+        b = dirichlet_partition(self.LABELS, 8, 0.5, 10, seed=3)
+        assert len(a) == len(b) == 8
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_different_seeds_differ(self):
+        a = dirichlet_partition(self.LABELS, 8, 0.5, 10, seed=3)
+        b = dirichlet_partition(self.LABELS, 8, 0.5, 10, seed=4)
+        assert any(not np.array_equal(x, y) for x, y in zip(a, b))
+
+    def test_exact_cover_with_possibly_empty_parts(self):
+        # small alpha concentrates classes: empty shards are legal, lost
+        # or duplicated samples are not
+        for alpha in (0.05, 0.5, 5.0):
+            parts = dirichlet_partition(self.LABELS, 12, alpha, 10, seed=0)
+            _assert_exact_cover(parts, len(self.LABELS))
+
+
+class TestOtherPartitioners:
+    LABELS = make_image_dataset(300, n_classes=10, seed=1).labels
+
+    def test_iid_exact_cover_and_determinism(self):
+        a = iid_partition(self.LABELS, 6, seed=2)
+        _assert_exact_cover(a, len(self.LABELS))
+        b = iid_partition(self.LABELS, 6, seed=2)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_quantity_exact_cover_and_skew(self):
+        parts = quantity_partition(self.LABELS, 6, alpha=0.3, seed=0)
+        _assert_exact_cover(parts, len(self.LABELS))
+        sizes = sorted(len(p) for p in parts)
+        assert sizes[-1] > sizes[0]          # sizes actually skewed
+
+    def test_nxc_exact_cover(self):
+        parts = nxc_partition(self.LABELS, 6, 5, 10, seed=0)
+        _assert_exact_cover(parts, len(self.LABELS))
+
+
+class TestBatchesShortShard:
+    DS = make_image_dataset(64, n_classes=4, seed=0)
+
+    def test_short_shard_yields_replacement_batch(self):
+        # regression: a shard smaller than batch_size used to yield
+        # NOTHING — the client silently dropped out of local training
+        idx = np.arange(5)
+        got = list(batches(self.DS, idx, batch_size=16, seed=0, epochs=2))
+        assert len(got) == 2                 # one full batch per epoch
+        for b in got:
+            assert b["images"].shape[0] == 16
+            assert set(np.unique(b["labels"])) <= set(
+                np.unique(self.DS.labels[idx]))
+
+    def test_empty_shard_yields_nothing(self):
+        assert list(batches(self.DS, np.empty((0,), np.int64), 8,
+                            seed=0)) == []
+
+    def test_full_shard_behavior_unchanged(self):
+        idx = np.arange(40)
+        got = list(batches(self.DS, idx, batch_size=16, seed=0, epochs=1))
+        assert len(got) == 2                 # 40 // 16, tail dropped
+        seen = np.concatenate([b["labels"] for b in got])
+        assert seen.shape == (32,)
+
+    def test_deterministic_under_seed(self):
+        idx = np.arange(5)
+        a = list(batches(self.DS, idx, 8, seed=3))
+        b = list(batches(self.DS, idx, 8, seed=3))
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x["images"], y["images"])

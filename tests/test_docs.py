@@ -17,8 +17,8 @@ def test_design_md_exists_with_cited_sections():
     sections = _design_sections()
     # the sections the codebase cites (§6 = method protocol; the former
     # §7 Data/§7.1 Synthetic renumbered to §8/§8.1 when §6 was inserted;
-    # §9 = population & participation)
-    for must in ("3", "5", "6", "8.1", "9", "Shape-applicability"):
+    # §9 = population & participation; §10 = scenarios & evaluation)
+    for must in ("3", "5", "6", "8.1", "9", "10", "Shape-applicability"):
         assert must in sections, (must, sections)
 
 
@@ -60,6 +60,30 @@ def test_readme_sampler_table_matches_registry():
         row = f"| `{name}` |"
         assert row in readme, f"README sampler table misses {row}"
         assert smp.summary in readme, (name, smp.summary)
+
+
+def test_readme_scenario_table_matches_registry():
+    """The README scenario table is generated from the fl/scenarios.py
+    registry: every registered scenario appears as a table row with its
+    protocol label and summary line."""
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.fl import scenarios
+    readme = (ROOT / "README.md").read_text()
+    for name in scenarios.available():
+        spec = scenarios.get(name)
+        row = f"| `{name}` | `{spec.protocol_label()}` | `{spec.method}` |"
+        assert row in readme, f"README scenario table misses {row}"
+        assert spec.summary in readme, (name, spec.summary)
+
+
+def test_design_documents_claim_thresholds():
+    """DESIGN.md §10 must keep describing the tier-2 suite's marker and
+    the orderings it pins (the thresholds the CI job runs)."""
+    text = (ROOT / "DESIGN.md").read_text()
+    s10 = text.split("## §10")[1].split("\n## ")[0]
+    for needle in ("paper_claims", "rounds_to", "fedavg", "dirichlet"):
+        assert needle in s10, f"DESIGN.md §10 lost {needle!r}"
 
 
 def test_readme_quotes_tier1_verify():

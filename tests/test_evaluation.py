@@ -1,0 +1,146 @@
+"""fl/evaluation.py: the jitted tiled eval engine against the seed
+host-loop reference — allclose on accuracy, EXACT on confusion counts —
+on both placements (single host and the 1x1 host mesh), plus padding and
+count-mode semantics (DESIGN.md §10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg9
+from repro.core.grouping import GroupSpec
+from repro.data.synthetic import make_image_dataset
+from repro.fl import evaluation as evaluation_lib
+from repro.fl.runtime import cnn_task
+from repro.launch.mesh import make_host_mesh
+
+_CFG = vgg9.reduced(n_classes=4, fed2_groups=0, norm="none")
+_TASK = cnn_task(_CFG)
+_PARAMS = _TASK.init_fn(jax.random.PRNGKey(0))
+_DS = make_image_dataset(300, n_classes=4, seed=3, noise=0.8)
+_BATCHES = [{"images": jnp.asarray(_DS.images[s:s + 64]),
+             "labels": jnp.asarray(_DS.labels[s:s + 64])}
+            for s in range(0, 256, 64)]
+
+
+def _reference_confusion():
+    from repro.models.cnn import apply_cnn
+    conf = np.zeros((4, 4))
+    for b in _BATCHES:
+        pred = np.asarray(jnp.argmax(apply_cnn(_PARAMS, _CFG,
+                                               b["images"]), -1))
+        for g, p in zip(np.asarray(b["labels"]), pred):
+            conf[g, p] += 1
+    return conf
+
+
+@pytest.mark.parametrize("mesh", [None, "host"],
+                         ids=["single-host", "1x1-mesh"])
+def test_engine_matches_host_loop_reference(mesh):
+    mesh = make_host_mesh() if mesh == "host" else None
+    engine = evaluation_lib.make_eval_engine(_TASK.predict_fn, 4,
+                                             mesh=mesh)
+    tiles = evaluation_lib.stage(_BATCHES, tile=64, mesh=mesh)
+    conf = np.asarray(engine.run(_PARAMS, tiles))
+    ref_acc = float(evaluation_lib.host_loop_eval(
+        jax.jit(_TASK.eval_fn), _PARAMS, _BATCHES))
+    np.testing.assert_array_equal(conf, _reference_confusion())  # exact
+    assert np.allclose(evaluation_lib.accuracy(conf), ref_acc)
+
+
+@pytest.mark.parametrize("mesh", [None, "host"],
+                         ids=["single-host", "1x1-mesh"])
+def test_padding_contributes_nothing(mesh):
+    mesh = make_host_mesh() if mesh == "host" else None
+    # 290 samples at tile 64 -> 5 tiles, 30 padded positions at mask 0
+    uneven = _BATCHES + [{"images": jnp.asarray(_DS.images[256:290]),
+                          "labels": jnp.asarray(_DS.labels[256:290])}]
+    engine = evaluation_lib.make_eval_engine(_TASK.predict_fn, 4,
+                                             mesh=mesh)
+    tiles = evaluation_lib.stage(uneven, tile=64, mesh=mesh)
+    assert tiles.n_tiles == 5 and tiles.n_real == 290
+    conf = np.asarray(engine.run(_PARAMS, tiles))
+    assert conf.sum() == 290                  # mask-0 padding never counts
+
+
+def test_counts_mode_matches_confusion_mode():
+    conf_engine = evaluation_lib.make_eval_engine(_TASK.predict_fn, 4)
+    cnt_engine = evaluation_lib.make_eval_engine(_TASK.predict_fn, None)
+    tiles = evaluation_lib.stage(_BATCHES, tile=64)
+    conf = np.asarray(conf_engine.run(_PARAMS, tiles))
+    cnt = np.asarray(cnt_engine.run(_PARAMS, tiles))
+    assert cnt[0] == np.trace(conf) and cnt[1] == conf.sum()
+    assert evaluation_lib.accuracy(cnt) == evaluation_lib.accuracy(conf)
+
+
+def test_result_stays_device_resident():
+    """The engine returns a device array — fl/runtime.py accumulates
+    per-round results without any host sync inside the round loop."""
+    engine = evaluation_lib.make_eval_engine(_TASK.predict_fn, 4)
+    tiles = evaluation_lib.stage(_BATCHES, tile=64)
+    out = engine.run(_PARAMS, tiles)
+    assert isinstance(out, jax.Array)
+
+
+def test_group_accuracy_rows():
+    conf = np.array([[8, 2, 0, 0],
+                     [1, 9, 0, 0],
+                     [0, 0, 5, 5],
+                     [0, 0, 0, 10]], np.float64)
+    spec = GroupSpec.contiguous(2, 4)
+    pc = evaluation_lib.per_class_accuracy(conf)
+    np.testing.assert_allclose(pc, [0.8, 0.9, 0.5, 1.0])
+    ga = evaluation_lib.group_accuracy(conf, spec)
+    np.testing.assert_allclose(ga, [17 / 20, 15 / 20])
+    # empty group row -> 0, not NaN
+    conf2 = np.zeros((4, 4))
+    conf2[0, 0] = 1
+    ga2 = evaluation_lib.group_accuracy(conf2, spec)
+    np.testing.assert_allclose(ga2, [1.0, 0.0])
+
+
+def test_stage_rejects_empty():
+    with pytest.raises(ValueError):
+        evaluation_lib.stage([], tile=8)
+
+
+def test_run_federated_host_loop_fallback():
+    """A task without predict_fn still evaluates — through the seed
+    host loop — and its history simply lacks the confusion rows."""
+    import dataclasses
+
+    from repro.data.synthetic import nxc_partition
+    from repro.fl.runtime import FLConfig, run_federated
+    task = dataclasses.replace(_TASK, predict_fn=None, n_classes=None)
+    parts = nxc_partition(_DS.labels, 4, 2, 4, seed=1)
+
+    def get_batch(sel):
+        return {"images": jnp.asarray(_DS.images[sel]),
+                "labels": jnp.asarray(_DS.labels[sel])}
+
+    fl = FLConfig(population=4, rounds=1, local_epochs=1,
+                  steps_per_epoch=2, batch_size=8, lr=0.01, method="fedavg",
+                  seed=0)
+    h = run_federated(task, fl, parts, get_batch, _BATCHES)
+    assert "confusion" not in h and len(h["acc"]) == 1
+
+
+def test_run_federated_history_gains_confusion():
+    """run_federated (engine-backed eval) reports per-round confusion +
+    per-class accuracy for tasks that declare n_classes."""
+    from repro.data.synthetic import nxc_partition
+    from repro.fl.runtime import FLConfig, run_federated
+    parts = nxc_partition(_DS.labels, 4, 2, 4, seed=1)
+
+    def get_batch(sel):
+        return {"images": jnp.asarray(_DS.images[sel]),
+                "labels": jnp.asarray(_DS.labels[sel])}
+
+    fl = FLConfig(population=4, rounds=2, local_epochs=1,
+                  steps_per_epoch=2, batch_size=8, lr=0.01, method="fedavg",
+                  seed=0, eval_batch=64)
+    h = run_federated(_TASK, fl, parts, get_batch, _BATCHES)
+    assert len(h["confusion"]) == 2 and h["confusion"][0].shape == (4, 4)
+    assert len(h["per_class_acc"]) == 2
+    assert h["confusion"][-1].sum() == 256
+    assert 0.0 <= h["acc"][-1] <= 1.0

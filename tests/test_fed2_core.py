@@ -1,18 +1,15 @@
 """Fed2 core: feature interpretation (Eq. 9/17), grouping, paired fusion
 (Eq. 18/19) — including the gradient-redirection invariant that IS the
 paper's mechanism."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import vgg9
 from repro.core import feature_stats as FS
 from repro.core import fusion
 from repro.core.grouping import GroupSpec, choose_decouple_depth
-from repro.models.cnn import apply_cnn, cnn_loss, init_cnn, layer_meta
+from repro.models.cnn import apply_cnn, init_cnn, layer_meta
 
 KEY = jax.random.PRNGKey(0)
 

@@ -1,0 +1,90 @@
+"""core/grouping.py edge cases: decouple-depth selection on degenerate TV
+profiles, and the group-permutation semantics of Eq. 19 under permuted
+local class orders."""
+import numpy as np
+import pytest
+
+from repro.core.grouping import (GroupSpec, choose_decouple_depth,
+                                 node_group_permutation)
+
+
+class TestChooseDecoupleDepth:
+    def test_empty_tvs(self):
+        assert choose_decouple_depth([]) == 0
+
+    def test_all_equal_tvs_clamped_by_min_shared(self):
+        # every layer is at max TV -> surge at layer 0, but at least
+        # min_shared shallow layers must stay shared
+        tvs = [1.0] * 10
+        assert choose_decouple_depth(tvs, min_shared=4) == 6
+        assert choose_decouple_depth(tvs, min_shared=10) == 0
+
+    def test_all_zero_tvs(self):
+        # max TV 0 -> threshold 0 -> surge at 0, min_shared clamps
+        assert choose_decouple_depth([0.0] * 6, min_shared=4) == 2
+
+    def test_min_shared_larger_than_network(self):
+        # min_shared beyond the layer count decouples nothing (never
+        # negative)
+        assert choose_decouple_depth([0.1, 5.0], min_shared=4) == 0
+
+    def test_surge_detection(self):
+        # TV surge at layer 6 of 8 -> decouple the last 2
+        tvs = [0.1] * 6 + [1.0, 1.0]
+        assert choose_decouple_depth(tvs, min_shared=2) == 2
+
+    def test_threshold_frac(self):
+        tvs = [0.3, 0.4, 0.6, 1.0]
+        # frac 0.5: first tv >= 0.5 is layer 2 -> depth 2 (min_shared=0)
+        assert choose_decouple_depth(tvs, threshold_frac=0.5,
+                                     min_shared=0) == 2
+        # frac 0.25: layer 0 already >= 0.25 -> everything decoupled
+        assert choose_decouple_depth(tvs, threshold_frac=0.25,
+                                     min_shared=0) == 4
+
+    def test_single_layer(self):
+        assert choose_decouple_depth([1.0], min_shared=0) == 1
+
+
+class TestNodeGroupPermutation:
+    def test_identity_under_canonical_order(self):
+        spec = GroupSpec.contiguous(5, 10)
+        perm = node_group_permutation(spec, list(range(10)))
+        np.testing.assert_array_equal(perm, np.arange(5))
+
+    def test_signature_based_under_permuted_local_order(self):
+        # the pairing key is the logit SIGNATURE, not the class order a
+        # node happens to enumerate locally — any local order maps back
+        # to the same canonical group
+        spec = GroupSpec.contiguous(4, 8)
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            local_order = rng.permutation(8)
+            perm = node_group_permutation(spec, local_order)
+            np.testing.assert_array_equal(perm, np.arange(4))
+
+    def test_round_trip_signatures(self):
+        # perm[g] holds the same logit signature as canonical g
+        spec = GroupSpec.contiguous(5, 10)
+        perm = node_group_permutation(spec, None)
+        for g in range(spec.n_groups):
+            assert (spec.logit_signature(int(perm[g]))
+                    == spec.logit_signature(g))
+
+    def test_more_groups_than_classes(self):
+        # several groups share one class: contiguous() maps g -> class
+        # g // rep; signatures repeat, the map stays consistent
+        spec = GroupSpec.contiguous(8, 4)
+        perm = node_group_permutation(spec, list(range(4)))
+        for g in range(8):
+            assert (spec.logit_signature(int(perm[g]))
+                    == spec.logit_signature(g))
+
+
+def test_group_of_class_and_signature_agree():
+    spec = GroupSpec.contiguous(5, 10)
+    for c in range(10):
+        g = spec.group_of_class(c)
+        assert c in spec.logit_signature(g)
+    with pytest.raises(ValueError):
+        spec.group_of_class(10)

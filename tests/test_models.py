@@ -134,6 +134,7 @@ def test_vlm_prefill_decode_agreement():
     h, _ = F.forward(params, cfg, tokens, embeds=patches)
     full_logits = unembed_apply(params["unembed"], h[:, cfg.n_patches:],
                                 cfg)
+    assert full_logits.shape == (B, s, cfg.vocab)
     # decode: feed patch embeds as pseudo-tokens is not supported; instead
     # run the text tokens with positions offset by n_patches and a cache
     # prefilled via single-token decode of each patch embedding through the

@@ -4,9 +4,7 @@ import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import moe as M

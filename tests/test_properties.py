@@ -1,5 +1,4 @@
 """Hypothesis property tests on the system's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,11 +7,12 @@ pytest.importorskip("hypothesis",
                     reason="optional dep: property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import fusion
-from repro.core.grouping import GroupSpec
-from repro.core.matching import match_permutation
-from repro.data.synthetic import dirichlet_partition, nxc_partition
-from repro.kernels import ops, ref
+from repro.core import fusion                             # noqa: E402
+from repro.core.grouping import GroupSpec                 # noqa: E402
+from repro.core.matching import match_permutation         # noqa: E402
+from repro.data.synthetic import (dirichlet_partition,    # noqa: E402
+                                  nxc_partition)
+from repro.kernels import ops, ref                        # noqa: E402
 
 SET = settings(max_examples=20, deadline=None)
 

@@ -1,0 +1,113 @@
+"""fl/scenarios.py: registry sanity, spec validation, and an end-to-end
+smoke of run_scenario (reduced extent) with record serialization
+(DESIGN.md §10). The full-extent paper orderings live in the tier-2
+suite, tests/test_paper_claims.py."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_image_dataset
+from repro.fl import methods as methods_lib
+from repro.fl import scenarios as scenarios_lib
+from repro.fl.scenarios import ConvergenceRecord, ScenarioSpec
+
+
+def test_registry_holds_the_paper_matrix():
+    names = scenarios_lib.available()
+    assert len(names) >= 6
+    protocols = {scenarios_lib.get(n).protocol for n in names}
+    # both paper non-IID protocols plus at least one control
+    assert {"nxc", "dirichlet"} <= protocols
+    assert protocols & {"iid", "quantity"}
+    # the claims suite needs the fed2-vs-fedavg pairs under both
+    for pair in (("nxc2_fed2", "nxc2_fedavg"),
+                 ("dir05_fed2", "dir05_fedavg")):
+        assert set(pair) <= set(names)
+    # every registered scenario must be constructible end to end
+    for n in names:
+        spec = scenarios_lib.get(n)
+        spec.fl_config()
+        spec.model_config()
+        assert spec.summary
+
+
+def test_spec_is_frozen_and_validates():
+    spec = scenarios_lib.get("nxc2_fed2")
+    with pytest.raises(Exception):
+        spec.method = "fedavg"
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="x", summary="s", protocol="nope",
+                     method="fedavg")
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="x", summary="s", protocol="iid",
+                     method="not-a-method")
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="x", summary="s", protocol="iid",
+                     method="fedavg", sampler="not-a-sampler")
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="x", summary="s", protocol="iid",
+                     method="fedavg", task="tabular")
+    with pytest.raises(ValueError):
+        scenarios_lib.get("not-registered")
+
+
+def test_override_leaves_registry_untouched():
+    spec = scenarios_lib.get("nxc2_fed2")
+    small = spec.override(rounds=1, train_size=100)
+    assert small.rounds == 1 and small.name == spec.name
+    assert scenarios_lib.get("nxc2_fed2").rounds == spec.rounds
+
+
+def test_partition_dispatch():
+    labels = make_image_dataset(200, n_classes=10, seed=0).labels
+    for name in scenarios_lib.available():
+        spec = scenarios_lib.get(name)
+        parts = spec.partition(labels)
+        assert len(parts) == spec.population
+        covered = np.concatenate(parts)
+        np.testing.assert_array_equal(np.sort(covered), np.arange(200))
+
+
+def test_protocol_labels():
+    assert scenarios_lib.get("nxc2_fed2").protocol_label() == "nxc(2)"
+    assert scenarios_lib.get("dir05_fed2").protocol_label() \
+        == "dirichlet(0.5)"
+    assert scenarios_lib.get("iid_fedavg").protocol_label() == "iid"
+
+
+def test_model_config_follows_method_capability():
+    grouped = scenarios_lib.get("nxc2_fed2").model_config()
+    plain = scenarios_lib.get("nxc2_fedavg").model_config()
+    assert methods_lib.get("fed2").uses_groups
+    assert grouped.fed2_groups > 0 and plain.fed2_groups == 0
+
+
+def test_run_scenario_smoke_and_record_roundtrip(tmp_path):
+    spec = scenarios_lib.get("nxc2_fed2").override(
+        rounds=2, train_size=200, test_size=80, steps_per_epoch=2,
+        batch_size=8, eval_batch=80)
+    rec = scenarios_lib.run_scenario(spec, outdir=str(tmp_path))
+    assert isinstance(rec, ConvergenceRecord)
+    assert len(rec.acc) == 2 and rec.rounds == [0, 1]
+    assert len(rec.per_class_acc[0]) == spec.n_classes
+    assert len(rec.per_group_acc[0]) == spec.groups
+    assert rec.group_signatures[0] == [0, 1]
+    assert rec.wall_total > 0
+    path = tmp_path / "scenario_nxc2_fed2.json"
+    assert path.is_file()
+    d = json.loads(path.read_text())
+    assert d["final_acc"] == rec.final_acc
+    assert d["protocol"] == "nxc(2)"
+    assert len(d["per_group_acc"]) == 2
+
+
+def test_rounds_to_metric():
+    rec = ConvergenceRecord(scenario="s", method="m", protocol="p",
+                            rounds=[0, 1, 2], acc=[0.1, 0.5, 0.4],
+                            per_class_acc=[], per_group_acc=[],
+                            group_signatures=[], wall=[], wall_total=0.0)
+    assert rec.rounds_to(0.5) == 2
+    assert rec.rounds_to(0.05) == 1
+    assert rec.rounds_to(0.9) is None
+    assert rec.best_acc == 0.5 and rec.final_acc == 0.4
