@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-claims smoke smoke-scenario scenarios bench-infra \
-	bench-cohort bench-eval dryrun-fl
+	bench-cohort bench-eval bench-tiers dryrun-fl check-drift
 
 # the tier-1 gate (ROADMAP.md)
 test:
@@ -37,6 +37,17 @@ smoke-scenario:
 scenarios:
 	$(PY) -m repro.launch.scenarios --scenarios all
 
+# re-lower the host dry-run matrix (same knobs as `smoke`) into a
+# scratch dir and diff its static lowering stats (flops, collective
+# counts/bytes, memory) against the committed baselines — the CI
+# perf-drift gate, runnable locally (DESIGN.md §11)
+DRIFT_FRESH ?= /tmp/repro-drift-fresh
+check-drift:
+	rm -rf $(DRIFT_FRESH)
+	$(PY) -m repro.launch.fl_dryrun --mesh host --clients 4 \
+	    --local-steps 2 --batch 8 --seq 32 --out $(DRIFT_FRESH)
+	$(PY) benchmarks/check_drift.py --fresh $(DRIFT_FRESH)
+
 # host-loop rounds/sec vs population at fixed cohort (DESIGN.md §9)
 bench-cohort:
 	$(PY) benchmarks/flbench.py bench_cohort
@@ -44,6 +55,11 @@ bench-cohort:
 # sharded tiled eval engine vs seed host loop (DESIGN.md §10)
 bench-eval:
 	$(PY) benchmarks/flbench.py bench_eval
+
+# heterogeneous-capacity rounds/sec + uplink bytes vs the homogeneous
+# baseline (fl/capacity.py, DESIGN.md §11)
+bench-tiers:
+	$(PY) benchmarks/flbench.py bench_tiers
 
 bench-infra:
 	REPRO_BENCH_SET=infra $(PY) -m benchmarks.run

@@ -1,0 +1,204 @@
+"""Perf-drift gate: diff freshly lowered dry-run records against the
+committed baselines in ``benchmarks/artifacts_perf/``.
+
+The ``launch/fl_dryrun.py`` records carry DETERMINISTIC static lowering
+stats — XLA flop estimates, collective op counts and buffer bytes,
+argument/output bytes — so, unlike wall clock, they can gate a PR
+red/green. The gate:
+
+  1. re-lowers the dry-run matrix on the PR into a scratch dir
+     (``make check-drift`` drives the host-mesh matrix, the same one
+     ``make smoke`` commits), then
+  2. compares every fresh ``dryrun_*.json`` against the committed file
+     of the same name, field by field.
+
+Policy per field (``FIELDS``):
+  - exact: status, collective counts + bytes, argument/output bytes,
+    host_gather_bytes, params bytes, use_kernel — any change is drift.
+  - rtol: flops (``--rtol``, default exact) and temp_bytes
+    (``--rtol-temp``, default 10% — XLA's buffer-assignment temp total
+    wobbles with scheduling decisions the PR didn't make).
+
+A fresh record with no committed baseline fails (commit the new
+baseline). A committed record the fresh run didn't produce is skipped
+ONLY when its mesh tag (the ``_<mesh>.json`` suffix) appears in no
+fresh record — CI lowers the host matrix only, so ``_16x16`` pod
+baselines skip with a note (they regenerate via ``make dryrun-fl``);
+a missing record of a mesh the fresh run DID cover means the matrix
+lost a case (a dropped method/family/tier) and fails. Explained drift: regenerate with
+``make smoke`` / ``make dryrun-fl`` (or ``--write-baseline``) and commit
+the new numbers alongside the change that caused them.
+
+  PYTHONPATH=src python -m repro.launch.fl_dryrun --mesh host --out /tmp/f
+  python benchmarks/check_drift.py --fresh /tmp/f
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+COMMITTED = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "artifacts_perf")
+
+# (dotted path, policy) — policy "exact" | "rtol" | "rtol-temp"
+FIELDS = (
+    ("status", "exact"),
+    ("use_kernel", "exact"),
+    ("flops", "rtol"),
+    ("memory.argument_bytes", "exact"),
+    ("memory.output_bytes", "exact"),
+    ("memory.temp_bytes", "rtol-temp"),
+    ("host_gather_bytes", "exact"),
+    ("params_bytes", "exact"),
+    ("full_params_bytes", "exact"),
+    ("collectives.all-reduce.count", "exact"),
+    ("collectives.all-reduce.bytes", "exact"),
+    ("collectives.all-gather.count", "exact"),
+    ("collectives.all-gather.bytes", "exact"),
+    ("collectives.reduce-scatter.count", "exact"),
+    ("collectives.reduce-scatter.bytes", "exact"),
+    ("collectives.all-to-all.count", "exact"),
+    ("collectives.all-to-all.bytes", "exact"),
+    ("collectives.collective-permute.count", "exact"),
+    ("collectives.collective-permute.bytes", "exact"),
+)
+
+_MISSING = object()
+
+
+def _get(rec: dict, dotted: str):
+    cur = rec
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return _MISSING
+        cur = cur[part]
+    return cur
+
+
+def _drifted(old, new, policy: str, rtol: float, rtol_temp: float):
+    """None when within policy, else a short reason."""
+    if old is _MISSING and new is _MISSING:
+        return None
+    if old is _MISSING:
+        return "field added (baseline lacks it — regenerate baselines)"
+    if new is _MISSING:
+        return "field missing from fresh record"
+    if policy == "exact" or not isinstance(old, (int, float)) \
+            or isinstance(old, bool) or isinstance(new, bool):
+        return None if old == new else f"{old!r} -> {new!r}"
+    tol = rtol_temp if policy == "rtol-temp" else rtol
+    denom = max(abs(float(old)), 1e-12)
+    rel = abs(float(new) - float(old)) / denom
+    if rel <= tol:
+        return None
+    return (f"{old!r} -> {new!r} "
+            f"({rel:+.2%} vs ±{tol:.0%} tolerance)")
+
+
+def _mesh_tag(name: str) -> str:
+    """The trailing ``_<mesh>`` of a record filename (e.g. ``1x1``)."""
+    return name[:-len(".json")].rsplit("_", 1)[-1]
+
+
+def compare_dirs(fresh_dir: str, committed_dir: str, *,
+                 rtol: float = 0.0, rtol_temp: float = 0.10,
+                 pattern: str = "dryrun_*.json") -> dict:
+    """Returns {"drift": [(file, field, reason)], "missing_baseline":
+    [fresh-only files], "lost": [committed records of a mesh the fresh
+    run covered but didn't produce — shrunk matrix, fails], "skipped":
+    [committed-only files of uncovered meshes], "compared": n}."""
+    fresh = {os.path.basename(p): p
+             for p in glob.glob(os.path.join(fresh_dir, pattern))}
+    committed = {os.path.basename(p): p
+                 for p in glob.glob(os.path.join(committed_dir, pattern))}
+    out = {"drift": [], "missing_baseline": [], "lost": [], "skipped": [],
+           "compared": 0}
+    for name in sorted(fresh):
+        if name not in committed:
+            out["missing_baseline"].append(name)
+            continue
+        with open(fresh[name]) as f:
+            new = json.load(f)
+        with open(committed[name]) as f:
+            old = json.load(f)
+        out["compared"] += 1
+        for dotted, policy in FIELDS:
+            reason = _drifted(_get(old, dotted), _get(new, dotted),
+                              policy, rtol, rtol_temp)
+            if reason is not None:
+                out["drift"].append((name, dotted, reason))
+    fresh_meshes = {_mesh_tag(n) for n in fresh}
+    for name in sorted(set(committed) - set(fresh)):
+        # a committed-only record of a mesh the fresh run covered means
+        # the matrix LOST a case (dropped method/family/tier) — drift
+        (out["lost"] if _mesh_tag(name) in fresh_meshes
+         else out["skipped"]).append(name)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff fresh dry-run lowering records against the "
+                    "committed perf baselines (CI perf-drift gate)")
+    ap.add_argument("--fresh", required=True,
+                    help="dir of freshly generated dryrun_*.json")
+    ap.add_argument("--committed", default=COMMITTED,
+                    help=f"baseline dir (default: {COMMITTED})")
+    ap.add_argument("--rtol", type=float, default=0.0,
+                    help="relative tolerance for flops (default exact)")
+    ap.add_argument("--rtol-temp", type=float, default=0.10,
+                    help="relative tolerance for XLA temp_bytes "
+                         "(default 10%%)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy the fresh records over the committed "
+                         "baselines instead of failing (explained drift)")
+    args = ap.parse_args(argv)
+
+    res = compare_dirs(args.fresh, args.committed, rtol=args.rtol,
+                       rtol_temp=args.rtol_temp)
+    for name in res["skipped"]:
+        print(f"[skip] {name}: not in the fresh set (pod-mesh baseline; "
+              "regenerate via `make dryrun-fl`)")
+    print(f"compared {res['compared']} records")
+
+    bad = False
+    if res["missing_baseline"]:
+        bad = True
+        for name in res["missing_baseline"]:
+            print(f"[DRIFT] {name}: no committed baseline — commit the "
+                  "new record")
+    for name in res["lost"]:
+        bad = True
+        print(f"[DRIFT] {name}: committed baseline missing from the "
+              "fresh run even though its mesh was covered — the dry-run "
+              "matrix lost this case")
+    for name, field, reason in res["drift"]:
+        bad = True
+        print(f"[DRIFT] {name}: {field}: {reason}")
+
+    if bad and args.write_baseline:
+        for name in res["missing_baseline"] + sorted(
+                {n for n, _, _ in res["drift"]}):
+            shutil.copy2(os.path.join(args.fresh, name),
+                         os.path.join(args.committed, name))
+            print(f"[write] {name} -> {args.committed}")
+        for name in res["lost"]:           # stale: covered mesh, no case
+            os.remove(os.path.join(args.committed, name))
+            print(f"[remove] stale baseline {name}")
+        return 0
+    if bad:
+        print("perf drift detected: lowering stats changed. If intended, "
+              "regenerate baselines (make smoke / make dryrun-fl, or "
+              "re-run with --write-baseline) and commit them with an "
+              "explanation.")
+        return 1
+    print("no perf drift")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

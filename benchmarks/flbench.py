@@ -328,6 +328,70 @@ def bench_cohort(*, populations=(16, 64, 256), cohort=8, rounds=None,
     return recs
 
 
+def bench_tiers(*, population=6, rounds=None, steps_per_epoch=4,
+                batch=16, mix=((1.0, 2), (0.5, 2), (0.25, 2)),
+                method="fedavg") -> dict:
+    """Heterogeneous-capacity rounds/sec and uplink bytes vs the
+    homogeneous baseline (fl/capacity.py, DESIGN.md §11): the same
+    population/partition/net runs once with every client full-width and
+    once under the tier mix. Uplink per round = Σ over participants of
+    their (tier) sub-model bytes — width-w tiers scale both in- and
+    out-channels, so a 0.25-width tier uplinks ~1/16 the dense bytes."""
+    import jax
+    from repro.fl.capacity import TierPlan, cnn_tier_model
+    from repro.fl.engine import stacked_param_bytes
+
+    rounds = rounds or (4 if QUICK else 10)
+    ds, test = dataset()
+    parts = nxc_partition(ds.labels, population, 5, N_CLASSES, seed=0)
+
+    def get_batch(sel):
+        return {"images": jnp.asarray(ds.images[sel]),
+                "labels": jnp.asarray(ds.labels[sel])}
+
+    test_batches = [{"images": jnp.asarray(test.images),
+                     "labels": jnp.asarray(test.labels)}]
+    cfg = model_cfg("vgg9", method)
+    task = cnn_task(cfg)
+
+    def timed_run(tiers):
+        fl = FLConfig(population=population, rounds=rounds,
+                      local_epochs=1, steps_per_epoch=steps_per_epoch,
+                      batch_size=batch, lr=0.008, momentum=0.9,
+                      method=method, seed=0, tiers=tiers)
+        t0 = time.time()
+        h = run_federated(task, fl, parts, get_batch, test_batches)
+        jax.block_until_ready(h["final_params"])
+        return h, time.time() - t0
+
+    h_hom, hom_s = timed_run(None)
+    h_tier, tier_s = timed_run(mix)
+
+    full_bytes = stacked_param_bytes(task, 1)
+    plan = TierPlan.from_mix(mix, population, seed=0)
+    tier_bytes = {w: cnn_tier_model(cfg, w).param_bytes for w, _ in mix}
+    uplink_tiered = sum(c * tier_bytes[w] for w, c in mix)
+    uplink_hom = population * full_bytes
+    rec = {"name": "flbench_tiers", "population": population,
+           "rounds": rounds, "method": method,
+           "mix": [[w, c] for w, c in plan.mix],
+           "hom_s": round(hom_s, 3), "tier_s": round(tier_s, 3),
+           "hom_rounds_per_s": round(rounds / hom_s, 3),
+           "tier_rounds_per_s": round(rounds / tier_s, 3),
+           "uplink_bytes_per_round_hom": uplink_hom,
+           "uplink_bytes_per_round_tiered": uplink_tiered,
+           "uplink_frac": round(uplink_tiered / uplink_hom, 4),
+           "tier_uplink_frac": {f"{w:g}": round(b / full_bytes, 4)
+                                for w, b in tier_bytes.items()},
+           "hom_final_acc": round(float(h_hom["acc"][-1]), 4),
+           "tier_final_acc": round(float(h_tier["acc"][-1]), 4)}
+    os.makedirs(ARTIFACTS_PERF, exist_ok=True)
+    with open(os.path.join(ARTIFACTS_PERF, "flbench_tiers.json"),
+              "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
 def bench_eval(*, n_eval=4096, eval_batches=(128, 512), repeats=None) \
         -> list:
     """Evaluation throughput: the jitted tiled engine (fl/evaluation.py
@@ -388,13 +452,15 @@ def bench_eval(*, n_eval=4096, eval_batches=(128, 512), repeats=None) \
 
 
 BENCHES = {"bench_engine": None, "bench_methods": None,
-           "bench_cohort": None, "bench_eval": None}  # CLI subcommands
+           "bench_cohort": None, "bench_eval": None,
+           "bench_tiers": None}  # CLI subcommands
 
 
 def main(argv=None):
     import sys
     chosen = (argv if argv is not None else sys.argv[1:]) or \
-        ["bench_engine", "bench_methods", "bench_cohort", "bench_eval"]
+        ["bench_engine", "bench_methods", "bench_cohort", "bench_eval",
+         "bench_tiers"]
     bad = [c for c in chosen if c not in BENCHES]
     if bad:
         raise SystemExit(f"unknown bench {bad}; available: "
@@ -420,6 +486,12 @@ def main(argv=None):
                   f"{round(1e6 * r['engine_s'] / r['repeats'])},"
                   f"speedup_vs_host_loop={r['speedup']:.2f}x,"
                   f"acc_match={r['acc_match']}")
+    if "bench_tiers" in chosen:
+        r = bench_tiers()
+        print(f"fl_tiers,{round(1e6 * r['tier_s'] / r['rounds'])},"
+              f"rounds_per_s={r['tier_rounds_per_s']}"
+              f"(hom {r['hom_rounds_per_s']}),"
+              f"uplink_frac={r['uplink_frac']}")
 
 
 if __name__ == "__main__":

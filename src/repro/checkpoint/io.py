@@ -18,24 +18,54 @@ def _flatten(params):
     return out, treedef
 
 
+def _params_file(path: str) -> str:
+    """The params archive the manifest names (older checkpoints predate
+    the field and always used params.npz)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("params_file", "params.npz")
+
+
 def save_checkpoint(path: str, params, *, step: int = 0, extra: dict = None):
+    """Atomic save with the manifest replace as the SINGLE publish
+    point: params land in a step-versioned archive first, then the
+    manifest naming that archive is os.replace'd. A crash at any point
+    leaves the previous manifest still naming the previous (intact)
+    archive — never a manifest paired with mismatched params (the
+    bit-identical resume guarantee depends on the pair being coherent).
+    Superseded archives are pruned after publish, best effort."""
     os.makedirs(path, exist_ok=True)
     arrays, _ = _flatten(params)
-    np.savez(os.path.join(path, "params.npz"), **arrays)
+    params_file = f"params-{step}.npz"
+    tmp_npz = os.path.join(path, f"params-{step}.tmp.npz")  # .npz suffix:
+    np.savez(tmp_npz, **arrays)                   # savez appends otherwise
+    os.replace(tmp_npz, os.path.join(path, params_file))
     manifest = {
         "step": step,
+        "params_file": params_file,
         "keys": sorted(arrays.keys()),
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
         "extra": extra or {},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath + ".tmp", "w") as f:
         json.dump(manifest, f, indent=1)
+    os.replace(mpath + ".tmp", mpath)
+    for name in os.listdir(path):             # prune superseded archives
+        # ONLY our own params archives (step-versioned, legacy, or tmp)
+        # — checkpoint_dir may be a directory holding unrelated .npz
+        ours = (name == "params.npz"
+                or (name.startswith("params-") and name.endswith(".npz")))
+        if ours and name != params_file:
+            try:
+                os.remove(os.path.join(path, name))
+            except OSError:
+                pass
 
 
 def load_checkpoint(path: str, like_params):
     """Restore into the structure of ``like_params`` (shape/dtype checked)."""
-    with np.load(os.path.join(path, "params.npz")) as data:
+    with np.load(os.path.join(path, _params_file(path))) as data:
         arrays = {k: data[k] for k in data.files}
     flat, treedef = jax.tree_util.tree_flatten_with_path(like_params)
     leaves = []
@@ -53,3 +83,42 @@ def load_checkpoint(path: str, like_params):
 def checkpoint_step(path: str) -> int:
     with open(os.path.join(path, "manifest.json")) as f:
         return json.load(f)["step"]
+
+
+def checkpoint_exists(path: str) -> bool:
+    if not os.path.isfile(os.path.join(path, "manifest.json")):
+        return False
+    try:
+        return os.path.isfile(os.path.join(path, _params_file(path)))
+    except (OSError, ValueError):
+        return False
+
+
+def save_fl_checkpoint(path: str, *, round_idx: int, global_params,
+                       server_state, client_state, rng) -> None:
+    """One federated run's full resumable state after ``round_idx``
+    completed rounds: global params, the method's server tree, the
+    population's stacked client state, and the host rng state (batch
+    packing and client sampling draw from it — restoring it is what
+    makes a resumed run bit-identical to the uninterrupted one)."""
+    save_checkpoint(path, {"global": global_params, "server": server_state,
+                           "clients": client_state},
+                    step=round_idx,
+                    extra={"rng_state": rng.bit_generator.state})
+
+
+def load_fl_checkpoint(path: str, *, like_global, like_server,
+                       like_clients):
+    """Restore a run saved by ``save_fl_checkpoint``.
+
+    Returns (round_idx, global_params, server_state, client_state,
+    rng_state); client_state comes back as WRITABLE host numpy arrays
+    (the population stack is mutated in place by scatter)."""
+    tree = load_checkpoint(path, {"global": like_global,
+                                  "server": like_server,
+                                  "clients": like_clients})
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    clients = jax.tree_util.tree_map(np.array, tree["clients"])
+    return (manifest["step"], tree["global"], tree["server"], clients,
+            manifest["extra"]["rng_state"])

@@ -93,6 +93,21 @@ class FedMethod:
     #                            (scaffold), which caps participants per
     #                            round at cohort_size
 
+    @property
+    def tier_fusion(self) -> bool:
+        """Whether the overlap-aware tiered fusion of fl/capacity.py may
+        drive this method (DESIGN.md §11): the round splits into one
+        fixed-shape tile per capacity tier, each tile's fuse is
+        unnormalized by its weight mass and re-divided by per-leaf
+        coverage — exact precisely when fuse is affine in the weighted
+        client mean. That is the cohort-tiling eligibility, minus
+        per-client state (tier-shaped client trees cannot ride one
+        population stack) and host fusion (matching is not defined
+        across sub-model widths). Override only for a method whose fuse
+        breaks the affine form in a way these flags don't capture."""
+        return (self.cohort_tiling and not self.host_fusion
+                and not self.client_stateful)
+
     def local_opt(self, cfg):
         """The optimizer driving the local phase. Default: the config's
         SGD(+momentum); methods whose analysis assumes a specific local

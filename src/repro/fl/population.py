@@ -48,11 +48,15 @@ class Population:
     (numpy) arrays (``RoundEngine.init_population_state``) — persistent
     across rounds, mutated only through ``scatter`` (in-place cohort-row
     writes, O(cohort) per round regardless of P).
+    tiers: optional (P,) int tier index per client — the capacity class
+    each logical client trains (fl/capacity.py ``TierPlan.assignment``);
+    None for homogeneous runs.
     """
     parts: list
     weights: np.ndarray
     group_weights: np.ndarray | None = None
     clients: PyTree = ()
+    tiers: np.ndarray | None = None
 
     @classmethod
     def from_parts(cls, parts, group_weights=None) -> "Population":

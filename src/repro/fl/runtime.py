@@ -84,6 +84,10 @@ class FLConfig:
     server_momentum: float = 0.9
     seed: int = 0
     eval_batch: int = 512
+    # heterogeneous capacity (fl/capacity.py, DESIGN.md §11): per-tier
+    # (width, client count) pairs — "1.0x2,0.5x2,0.25x2" or a tuple of
+    # pairs; None/() = homogeneous. Counts must sum to the population.
+    tiers: Any = None
 
     def __post_init__(self):
         if self.method not in methods_lib.available():
@@ -108,6 +112,15 @@ class FLConfig:
                 f"exceed population ({self.population}): the cohort is "
                 "the fixed engine width a round's participants are "
                 "sampled into")
+        if not self.tiers:
+            object.__setattr__(self, "tiers", None)
+        else:
+            from repro.fl import capacity as capacity_lib
+            mix = capacity_lib.parse_tiers(self.tiers)
+            capacity_lib.validate_mix(mix, self.population)
+            capacity_lib.check_tier_support(methods_lib.get(self.method),
+                                            mix)
+            object.__setattr__(self, "tiers", mix)
 
 
 @dataclasses.dataclass
@@ -123,6 +136,9 @@ class FLTask:
     # into (C, C) confusion counts (None for LM tasks, where C = vocab).
     predict_fn: Callable[[PyTree, dict], tuple] | None = None
     n_classes: int | None = None
+    # capacity tiers (fl/capacity.py): width -> TierModel sub-model
+    # builder; None = the family has no tier support (lm for now).
+    tier_fn: Callable[[float], Any] | None = None
 
 
 def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
@@ -144,6 +160,32 @@ def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_client)
 
 
+def pad_tile_inputs(pop: Population, tids, width: int, get_batch, n_steps,
+                    batch_size, rng, uniform_weights: bool = False,
+                    gw_cols: int | None = None):
+    """Pad one engine tile to ``width`` slots (repeating the first
+    participant at zero weight) and assemble its weights / presence rows
+    / packed batches — THE shared padding semantics of cohort tiling
+    (here) and the per-tier tiles (fl/capacity.py). gw_cols restricts
+    the presence rows to the first K group columns (a tier that dropped
+    the rest). Returns (padded_ids, weights, group_weights, batches)."""
+    tids = np.asarray(tids, np.int64)
+    n_real = len(tids)
+    padded = np.concatenate(
+        [tids, np.full(width - n_real, tids[0], np.int64)])
+    w = (np.ones(width) if uniform_weights
+         else pop.weights[padded].copy())
+    w[n_real:] = 0.0
+    gw = None
+    if pop.group_weights is not None:
+        gw = pop.group_weights[padded]
+        gw = (gw if gw_cols is None else gw[:, :gw_cols]).copy()
+        gw[n_real:] = 0.0
+    batches = _pack_client_batches([pop.parts[i] for i in padded],
+                                   get_batch, n_steps, batch_size, rng)
+    return padded, w, gw, batches
+
+
 def run_sampled_round(engine, pop: Population, method, server_state,
                       global_params, ids, get_batch, n_steps, cfg, rng,
                       uniform_weights: bool = False):
@@ -157,22 +199,9 @@ def run_sampled_round(engine, pop: Population, method, server_state,
     ids = np.asarray(ids, np.int64)
 
     def tile_inputs(tids):
-        """Pad a tile to cohort width (repeating the first participant at
-        zero weight) and assemble its weights/presence rows/batches."""
-        n_real = len(tids)
-        padded = np.concatenate(
-            [tids, np.full(C - n_real, tids[0], np.int64)])
-        w = (np.ones(C) if uniform_weights
-             else pop.weights[padded].copy())
-        w[n_real:] = 0.0
-        gw = None
-        if pop.group_weights is not None:
-            gw = pop.group_weights[padded].copy()
-            gw[n_real:] = 0.0
-        batches = _pack_client_batches([pop.parts[i] for i in padded],
-                                       get_batch, n_steps, cfg.batch_size,
-                                       rng)
-        return padded, w, gw, batches
+        return pad_tile_inputs(pop, tids, C, get_batch, n_steps,
+                               cfg.batch_size, rng,
+                               uniform_weights=uniform_weights)
 
     if len(ids) == C:
         _, w, gw, batches = tile_inputs(ids)
@@ -253,7 +282,9 @@ def run_sampled_round(engine, pop: Population, method, server_state,
 
 def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
                   test_batches, *, log=None, class_counts=None,
-                  group_spec=None, mesh=None, use_kernel=None) -> dict:
+                  group_spec=None, mesh=None, use_kernel=None,
+                  checkpoint_dir=None, checkpoint_every: int = 1,
+                  resume: bool = False) -> dict:
     """parts: list of cfg.population per-client index arrays;
     get_batch(sel)->batch dict; test_batches: list of batch dicts for
     global eval.
@@ -279,13 +310,36 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     timestamps (rounds execute asynchronously unless ``log`` forces a
     sync — client-stateful methods under PARTIAL participation also sync
     on the per-round state scatter); ``wall_total`` is the true
-    end-to-end time including the final materialization."""
+    end-to-end time including the final materialization.
+
+    ``cfg.tiers`` routes the rounds through the heterogeneous-capacity
+    engine (fl/capacity.py, DESIGN.md §11): one compiled tile per tier,
+    overlap-aware fusion. A single width-1.0 tier is degenerate and runs
+    the homogeneous path unchanged (bit-identical;
+    tests/test_capacity.py).
+
+    checkpoint_dir: save the resumable run state (global params, server
+    state, population client state, host rng) after every
+    ``checkpoint_every``-th round; with ``resume=True`` an existing
+    checkpoint restores it and the loop continues from the saved round —
+    bit-identically to the uninterrupted run (history then covers only
+    the resumed rounds; resuming an already-finished run trains nothing
+    and reports one eval of the restored model). Checkpointing syncs the
+    device each saved round; leave checkpoint_dir None for the async
+    fast path."""
     if len(parts) != cfg.population:
         raise ValueError(
             f"run_federated got {len(parts)} client shards for "
             f"FLConfig.population={cfg.population}; the partition defines "
             "the logical population — partition with "
             "n_clients=cfg.population or fix the config")
+    if checkpoint_dir and (not isinstance(checkpoint_every, int)
+                           or isinstance(checkpoint_every, bool)
+                           or checkpoint_every < 1):
+        raise ValueError(
+            f"checkpoint_every must be a positive int (rounds between "
+            f"saves; the final round always saves), got "
+            f"{checkpoint_every!r}")
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     global_params = task.init_fn(key)
@@ -296,8 +350,23 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
             and group_spec is not None:
         gw = fusion_lib.presence_group_weights(class_counts, group_spec)
     pop = Population.from_parts(parts, group_weights=gw)
-    engine = make_round_engine(task, cfg, global_params, mesh=mesh,
-                               use_kernel=use_kernel, method=method)
+    tiered = None
+    if cfg.tiers is not None:
+        from repro.fl import capacity as capacity_lib
+        plan = capacity_lib.TierPlan.from_mix(cfg.tiers, cfg.population,
+                                              seed=cfg.seed)
+        if not plan.trivial:      # single width-1.0 tier IS the
+            #                       homogeneous engine (bit-identical)
+            pop.tiers = plan.assignment
+            tiered = capacity_lib.make_tiered_engine(
+                task, cfg, global_params, plan, mesh=mesh,
+                use_kernel=use_kernel, method=method,
+                use_gw=pop.group_weights is not None)
+    if tiered is not None:
+        engine = tiered.full
+    else:
+        engine = make_round_engine(task, cfg, global_params, mesh=mesh,
+                                   use_kernel=use_kernel, method=method)
     server_state = engine.init_server_state(global_params)
     pop.clients = engine.init_population_state(global_params, pop.size)
 
@@ -308,6 +377,17 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
         eval_tiles = evaluation_lib.stage(test_batches,
                                           tile=cfg.eval_batch, mesh=mesh)
 
+    start_round = 0
+    if checkpoint_dir and resume:
+        from repro.checkpoint import io as ckpt_io
+        if ckpt_io.checkpoint_exists(checkpoint_dir):
+            (start_round, global_params, server_state, pop.clients,
+             rng_state) = ckpt_io.load_fl_checkpoint(
+                checkpoint_dir, like_global=global_params,
+                like_server=server_state, like_clients=pop.clients)
+            rng.bit_generator.state = rng_state
+    already_complete = start_round >= cfg.rounds
+
     history = {"round": [], "acc": [], "wall": [], "participants": []}
     n_steps = cfg.local_epochs * cfg.steps_per_epoch
     counts = []                    # device arrays; materialized at the end
@@ -315,12 +395,11 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     uniform_w = sampler.fusion_weights == "uniform"
     full_ids = None       # shared arange: full participation carries no
     #                       per-round information, don't store it R times
-    for r in range(cfg.rounds):
-        ids = sampler.sample(r, cfg.population, cfg.cohort_size, rng,
-                             weights=pop.weights)
-        server_state, global_params = run_sampled_round(
-            engine, pop, method, server_state, global_params, ids,
-            get_batch, n_steps, cfg, rng, uniform_weights=uniform_w)
+
+    def eval_and_record(r, participants):
+        """Evaluate the current global and append one history row — the
+        single shape of a per-round record (the round loop and the
+        already-complete resume tail must agree)."""
         if eval_engine is not None:
             c = eval_engine.run(global_params, eval_tiles)
         else:
@@ -328,15 +407,43 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
                                               global_params, test_batches)
         counts.append(c)
         history["round"].append(r)
+        history["participants"].append(participants)
+        history["wall"].append(time.time() - t0)
+        return c
+
+    for r in range(start_round, cfg.rounds):
+        ids = sampler.sample(r, cfg.population, cfg.cohort_size, rng,
+                             weights=pop.weights)
+        if tiered is not None:
+            from repro.fl.capacity import run_tiered_round
+            server_state, global_params = run_tiered_round(
+                tiered, pop, method, server_state, global_params, ids,
+                get_batch, n_steps, cfg, rng, uniform_weights=uniform_w)
+        else:
+            server_state, global_params = run_sampled_round(
+                engine, pop, method, server_state, global_params, ids,
+                get_batch, n_steps, cfg, rng, uniform_weights=uniform_w)
+        if checkpoint_dir and ((r + 1) % checkpoint_every == 0
+                               or r == cfg.rounds - 1):
+            from repro.checkpoint import io as ckpt_io
+            ckpt_io.save_fl_checkpoint(
+                checkpoint_dir, round_idx=r + 1,
+                global_params=global_params, server_state=server_state,
+                client_state=pop.clients, rng=rng)
         if len(ids) == cfg.population:
             if full_ids is None:
                 full_ids = np.asarray(ids)
-            history["participants"].append(full_ids)
+            participants = full_ids
         else:
-            history["participants"].append(np.asarray(ids))
-        history["wall"].append(time.time() - t0)
+            participants = np.asarray(ids)
+        c = eval_and_record(r, participants)
         if log:                    # logging opts into the per-round sync
             log(f"round {r:3d} acc {_count_acc(c):.4f}")
+    if already_complete:
+        # resuming a finished run: nothing to train, but callers index
+        # h["acc"][-1] — report one eval of the restored model instead
+        # of an empty history
+        eval_and_record(cfg.rounds - 1, np.asarray([], np.int64))
     if eval_engine is not None and task.n_classes is not None:
         conf = [np.asarray(c) for c in counts]
         history["confusion"] = conf
@@ -368,6 +475,10 @@ def cnn_task(model_cfg) -> FLTask:
         return (jnp.argmax(logits, -1), batch["labels"],
                 jnp.ones(batch["labels"].shape, jnp.float32))
 
+    def tier_fn(width):
+        from repro.fl import capacity as capacity_lib
+        return capacity_lib.cnn_tier_model(model_cfg, width)
+
     return FLTask(
         init_fn=lambda k: init_cnn(k, model_cfg),
         loss_fn=lambda p, b: cnn_loss(p, model_cfg, b),
@@ -377,6 +488,7 @@ def cnn_task(model_cfg) -> FLTask:
             s, model_cfg, w),
         predict_fn=predict,
         n_classes=model_cfg.n_classes,
+        tier_fn=tier_fn,
     )
 
 

@@ -53,6 +53,10 @@ class ScenarioSpec:
     groups/decouple: Fed2 structure adaptation for group-structured
     methods (ignored by coordinate methods, whose net is the plain
     baseline of the same widths).
+    tiers: capacity heterogeneity (fl/capacity.py, DESIGN.md §11) —
+    per-tier (width, client count) pairs summing to the population; ()
+    = homogeneous capacity. Group-structured methods need width·G ∈ ℕ
+    (a tier keeps whole feature groups).
     """
     name: str
     summary: str
@@ -67,6 +71,7 @@ class ScenarioSpec:
     population: int = 6
     cohort_size: int | None = None
     sampler: str = "full"
+    tiers: tuple = ()
     rounds: int = 10
     local_epochs: int = 1
     steps_per_epoch: int = 6
@@ -96,6 +101,11 @@ class ScenarioSpec:
             raise ValueError(
                 f"unknown client sampler {self.sampler!r}; available: "
                 f"{', '.join(population_lib.available())}")
+        if self.tiers:
+            from repro.fl import capacity as capacity_lib
+            mix = capacity_lib.parse_tiers(self.tiers)
+            capacity_lib.validate_mix(mix, self.population)
+            object.__setattr__(self, "tiers", mix)
 
     def override(self, **kw) -> "ScenarioSpec":
         """A copy with fields replaced (smoke runs: fewer rounds, less
@@ -152,7 +162,8 @@ class ScenarioSpec:
                         steps_per_epoch=self.steps_per_epoch,
                         batch_size=self.batch_size, lr=self.lr,
                         momentum=self.momentum, method=self.method,
-                        seed=self.seed, eval_batch=self.eval_batch)
+                        seed=self.seed, eval_batch=self.eval_batch,
+                        tiers=self.tiers or None)
 
     def group_spec(self) -> GroupSpec:
         """The canonical class->group map the per-group accuracy rows
@@ -173,6 +184,9 @@ class ConvergenceRecord:
     group_signatures: list  # group g -> sorted class ids
     wall: list              # per-round dispatch timestamps (s)
     wall_total: float
+    tiers: list = dataclasses.field(default_factory=list)
+    #                       # capacity mix [[width, count], ...]; [] =
+    #                       # homogeneous
 
     @property
     def final_acc(self) -> float:
@@ -244,7 +258,8 @@ def run_scenario(spec: ScenarioSpec, *, mesh=None, use_kernel=None,
         group_signatures=[sorted(gspec.logit_signature(g))
                           for g in range(gspec.n_groups)],
         wall=[round(float(w), 3) for w in h["wall"]],
-        wall_total=round(float(h["wall_total"]), 3))
+        wall_total=round(float(h["wall_total"]), 3),
+        tiers=[[w, c] for w, c in spec.tiers] if spec.tiers else [])
     if outdir is not None:
         rec.save(outdir)
     return rec
@@ -317,3 +332,28 @@ register(ScenarioSpec(
 register(ScenarioSpec(
     name="qskew_fed2", protocol="quantity", method="fed2",
     summary="quantity-skew control (Dir(0.5) shard sizes), Fed2"))
+
+# -- heterogeneous capacity (fl/capacity.py, DESIGN.md §11) -----------------
+# The width-scaled-client regime of Heterogeneous Federated Learning
+# (Yu et al., PAPERS.md) on the paper's non-IID protocols: every client
+# trains a feature-aligned sub-model of its tier's width, fusion is
+# overlap-aware. Coordinate methods (fedavg) slice hidden channels by
+# prefix and keep the full classifier head, so any width works;
+# group-structured methods (fed2) drop WHOLE feature groups (width·G ∈ ℕ
+# at G=5 → widths from {0.2, 0.4, 0.6, 0.8, 1.0}).
+register(ScenarioSpec(
+    name="nxc2_fedavg_tiers", protocol="nxc", method="fedavg",
+    tiers=((1.0, 2), (0.5, 2), (0.25, 2)),
+    summary="N x C skew + 1.0/0.5/0.25-width capacity tiers, FedAvg"))
+register(ScenarioSpec(
+    name="nxc2_fed2_tiers", protocol="nxc", method="fed2",
+    tiers=((1.0, 2), (0.6, 2), (0.2, 2)),
+    summary="N x C skew + group-whole 1.0/0.6/0.2 tiers, Fed2"))
+register(ScenarioSpec(
+    name="dir05_fed2_tiers", protocol="dirichlet", method="fed2", lr=0.01,
+    tiers=((1.0, 2), (0.6, 2), (0.2, 2)),
+    summary="Dirichlet(0.5) skew + group-whole 1.0/0.6/0.2 tiers, Fed2"))
+register(ScenarioSpec(
+    name="dir05_fedavg_tiers", protocol="dirichlet", method="fedavg",
+    lr=0.01, tiers=((1.0, 2), (0.5, 2), (0.25, 2)),
+    summary="Dirichlet(0.5) skew + 1.0/0.5/0.25-width tiers, FedAvg"))

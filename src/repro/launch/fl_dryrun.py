@@ -16,6 +16,13 @@ Covers EVERY method in the fl/methods.py registry (``methods.available()``
 model families (cnn + lm); one collective-bytes JSON record per
 combination. Stateful methods (scaffold control variates, server
 momentum/Adam) lower with their state trees threaded through the round.
+Records carry XLA's static ``flops`` estimate — together with the
+collective counts/bytes these are DETERMINISTIC lowering stats, diffed
+against the committed baselines by the CI perf-drift gate
+(benchmarks/check_drift.py, ``make check-drift``). A capacity-tier tile
+matrix (fl/capacity.py, DESIGN.md §11) lowers alongside by default
+(``--no-tiers`` to skip): per-tier sub-model programs with their uplink
+bytes.
 
   PYTHONPATH=src python -m repro.launch.fl_dryrun [--clients 16]
   PYTHONPATH=src python -m repro.launch.fl_dryrun --mesh host   # CPU smoke
@@ -89,6 +96,22 @@ def _batch_elems(family: str, batch: int, seq: int) -> dict:
             "mask": ((batch, seq), jnp.float32)}
 
 
+def _flops(compiled) -> float:
+    """XLA's static flop estimate for a compiled program (-1.0 when the
+    backend provides none) — a deterministic lowering stat, diffed by the
+    CI perf-drift gate (benchmarks/check_drift.py)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:   # noqa: BLE001 — backend without cost analysis
+        return -1.0
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    try:
+        return float(ca.get("flops", -1.0))
+    except (AttributeError, TypeError, ValueError):
+        return -1.0
+
+
 def run_one(method: str, family: str, mesh, mesh_name: str, *,
             clients: int, local_steps: int, batch: int, seq: int,
             outdir: str, cohort_size=None, sampler: str = "full",
@@ -129,6 +152,7 @@ def run_one(method: str, family: str, mesh, mesh_name: str, *,
         rec.update(
             status="ok", arch=arch,
             lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops=_flops(compiled),
             use_kernel=resolve_use_kernel(use_kernel, mesh),
             memory={"temp_bytes": mem.temp_size_in_bytes,
                     "argument_bytes": mem.argument_size_in_bytes,
@@ -161,6 +185,87 @@ def _write(outdir, tag, rec):
         json.dump(rec, f, indent=1)
 
 
+# widths per tier-matrix method: group-structured methods keep WHOLE
+# feature groups (width*G integer at both the reduced G=5 and full G=10
+# nets), coordinate methods slice any prefix width
+TIER_WIDTHS_GROUPED = (1.0, 0.6, 0.2)
+TIER_WIDTHS_PLAIN = (1.0, 0.5, 0.25)
+
+
+def run_tier_one(method: str, width: float, mesh, mesh_name: str, *,
+                 clients: int, local_steps: int, batch: int, outdir: str,
+                 use_kernel=None, verbose: bool = True) -> dict:
+    """Lower+compile ONE capacity tier's tile (fl/capacity.py): the
+    vmapped local phase + within-tier fuse at the tier's sub-model
+    shapes. Records the tier's per-client uplink bytes next to the
+    lowering stats — the width-squared economics the tier system buys."""
+    from repro.fl.capacity import lower_tier_tile
+    from repro.fl.engine import stacked_param_bytes
+
+    wtag = f"w{round(width * 100):03d}"
+    tag = f"fl_tier_{method}_{wtag}_{mesh_name}"
+    rec = {"kind": "fl_tier", "method": method, "family": "cnn",
+           "mesh": mesh_name, "width": width, "cohort_size": clients,
+           "local_steps": local_steps, "batch": batch}
+    try:
+        kind = "host" if mesh_name == "1x1" else "pod"
+        task, arch = _cnn_case(method, kind)
+        fl = FLConfig(population=clients, method=method)
+        t0 = time.time()
+        lowered, model = lower_tier_tile(task, fl, mesh,
+                                         _batch_elems("cnn", batch, 0),
+                                         width=width,
+                                         local_steps=local_steps,
+                                         use_kernel=use_kernel)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        full_bytes = stacked_param_bytes(task, 1)
+        rec.update(
+            status="ok", arch=arch, tier_arch=model.model_cfg.arch_id,
+            kept_groups=model.model_cfg.fed2_groups,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops=_flops(compiled),
+            params_bytes=model.param_bytes,
+            full_params_bytes=full_bytes,
+            uplink_frac=round(model.param_bytes / full_bytes, 4),
+            use_kernel=resolve_use_kernel(use_kernel, mesh),
+            memory={"temp_bytes": mem.temp_size_in_bytes,
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes},
+            collectives=collective_bytes(compiled.as_text()))
+        if verbose:
+            print(f"[ok]   {tag}: lower {t_lower:.1f}s compile "
+                  f"{t_compile:.1f}s uplink {rec['uplink_frac']:.3f}x "
+                  f"dense")
+    except Exception as e:  # noqa: BLE001 — record, keep the matrix going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    _write(outdir, tag, rec)
+    return rec
+
+
+def run_tier_matrix(mesh, mesh_name: str, *, methods=("fedavg", "fed2"),
+                    clients: int, local_steps: int, batch: int,
+                    outdir: str, use_kernel=None,
+                    verbose: bool = True) -> list:
+    recs = []
+    for m in methods:
+        grouped = methods_lib.get(m).uses_groups
+        widths = TIER_WIDTHS_GROUPED if grouped else TIER_WIDTHS_PLAIN
+        for w in widths:
+            recs.append(run_tier_one(m, w, mesh, mesh_name,
+                                     clients=clients,
+                                     local_steps=local_steps, batch=batch,
+                                     outdir=outdir, use_kernel=use_kernel,
+                                     verbose=verbose))
+    return recs
+
+
 DEFAULT_OUT = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "..", "..",
     "benchmarks", "artifacts_perf"))      # cwd-independent, like flbench
@@ -170,7 +275,8 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                families=FAMILIES, clients: int = 16, local_steps: int = 4,
                batch: int = 32, seq: int = 64, outdir: str = DEFAULT_OUT,
                cohort_size=None, sampler: str = "full",
-               use_kernel=None, verbose: bool = True) -> list:
+               use_kernel=None, tiers: bool = True,
+               verbose: bool = True) -> list:
     methods = methods_lib.available() if methods is None else methods
     bad = [m for m in methods if m not in methods_lib.available()] + \
           [f for f in families if f not in FAMILIES]
@@ -185,11 +291,18 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
     else:
         raise ValueError(f"unknown mesh_kind: {mesh_kind!r} "
                          "(expected 'pod' or 'host')")
-    return [run_one(m, f, mesh, mesh_name, clients=clients,
+    recs = [run_one(m, f, mesh, mesh_name, clients=clients,
                     local_steps=local_steps, batch=batch, seq=seq,
                     outdir=outdir, cohort_size=cohort_size, sampler=sampler,
                     use_kernel=use_kernel, verbose=verbose)
             for f in families for m in methods]
+    if tiers and "cnn" in families:
+        tier_methods = [m for m in ("fedavg", "fed2") if m in methods]
+        recs += run_tier_matrix(mesh, mesh_name, methods=tier_methods,
+                                clients=clients, local_steps=local_steps,
+                                batch=batch, outdir=outdir,
+                                use_kernel=use_kernel, verbose=verbose)
+    return recs
 
 
 def main():
@@ -218,6 +331,11 @@ def main():
                          "default follows the env-driven fusion default. "
                          "Honored on 1-device meshes; multi-device meshes "
                          "force the collective path")
+    ap.add_argument("--tiers", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="also lower the capacity-tier tile matrix "
+                         "(fedavg+fed2 x sub-model widths, cnn; "
+                         "fl/capacity.py)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
 
@@ -230,7 +348,7 @@ def main():
                       local_steps=args.local_steps, batch=args.batch,
                       seq=args.seq, outdir=args.out,
                       cohort_size=args.cohort_size, sampler=args.sampler,
-                      use_kernel=args.use_kernel)
+                      use_kernel=args.use_kernel, tiers=args.tiers)
     n_fail = sum(r["status"] == "error" for r in recs)
     print(f"done; {len(recs)} records, {n_fail} failures")
     raise SystemExit(1 if n_fail else 0)

@@ -13,6 +13,8 @@ Examples:
       --arch vgg9 --method fed2 --rounds 10 --nodes 6 --classes-per-node 5
   PYTHONPATH=src python -m repro.launch.train --mode fl --nodes 64 \
       --cohort-size 16 --sampler uniform          # partial participation
+  PYTHONPATH=src python -m repro.launch.train --mode fl --nodes 6 \
+      --method fedavg --tiers 1.0x2,0.5x2,0.25x2  # capacity tiers
 """
 from __future__ import annotations
 
@@ -123,7 +125,8 @@ def run_fl(args):
                   local_epochs=args.local_epochs,
                   steps_per_epoch=args.steps_per_epoch,
                   batch_size=args.batch, lr=args.lr, momentum=0.9,
-                  method=args.method, seed=args.seed)
+                  method=args.method, seed=args.seed,
+                  tiers=args.tiers or None)
     h = run_federated(cnn_task(cfg), fl, parts, get_batch, test_batches,
                       log=print)
     print("final acc:", h["acc"][-1])
@@ -157,6 +160,11 @@ def main():
     ap.add_argument("--sampler", default="full",
                     choices=list(population_lib.available()),
                     help="per-round participation strategy")
+    ap.add_argument("--tiers", default="",
+                    help="fl mode: heterogeneous capacity tiers as "
+                         "<width>x<count> pairs summing to --nodes, e.g. "
+                         "1.0x2,0.5x2,0.25x2 (fl/capacity.py; "
+                         "group-structured methods need width*G integer)")
     ap.add_argument("--classes-per-node", type=int, default=5)
     ap.add_argument("--dirichlet", type=float, default=0.0)
     ap.add_argument("--local-epochs", type=int, default=1)
@@ -178,6 +186,8 @@ def main():
         ap.error("--dry-run is only supported with --mode fl")
     if args.scenario and args.mode != "fl":
         ap.error("--scenario is only supported with --mode fl")
+    if args.tiers and args.mode != "fl":
+        ap.error("--tiers is only supported with --mode fl")
     (run_lm if args.mode == "lm" else run_fl)(args)
 
 

@@ -1,0 +1,434 @@
+"""Heterogeneous-capacity tiers (fl/capacity.py, DESIGN.md §11): tier
+plans, feature-aligned sub-model extraction (group-whole slicing), the
+per-tier tile engines with overlap-aware fusion, and the degenerate
+width-1.0 single-tier path being bit-identical to the homogeneous
+engine for every registered method."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg9
+from repro.core import fusion as fusion_lib
+from repro.data.synthetic import make_image_dataset, nxc_partition
+from repro.fl import capacity as cap
+from repro.fl import methods as methods_lib
+from repro.fl.engine import make_round_engine
+from repro.fl.population import Population
+from repro.fl.runtime import (FLConfig, _pack_client_batches, cnn_task,
+                              run_federated)
+
+_DS = make_image_dataset(240, n_classes=10, seed=0, noise=0.8)
+_TEST = make_image_dataset(80, n_classes=10, seed=9, noise=0.8)
+
+
+def _get_batch(sel):
+    return {"images": jnp.asarray(_DS.images[sel]),
+            "labels": jnp.asarray(_DS.labels[sel])}
+
+
+_TEST_BATCHES = [{"images": jnp.asarray(_TEST.images),
+                  "labels": jnp.asarray(_TEST.labels)}]
+
+_GROUPED = vgg9.reduced()                              # G=5, decouple=3
+_PLAIN = vgg9.reduced(fed2_groups=0, norm="none")
+
+
+def _fl(method, population=6, tiers=None, rounds=2, **kw):
+    return FLConfig(population=population, rounds=rounds, local_epochs=1,
+                    steps_per_epoch=2, batch_size=8, lr=0.02,
+                    momentum=0.9, method=method, seed=0, tiers=tiers,
+                    **kw)
+
+
+# ---------------------------------------------------------------------------
+# Tier plan: parsing, validation, assignment
+# ---------------------------------------------------------------------------
+
+
+def test_parse_tiers_string_and_tuple():
+    mix = cap.parse_tiers("1.0x2,0.5x2,0.25x2")
+    assert mix == ((1.0, 2), (0.5, 2), (0.25, 2))
+    assert cap.parse_tiers([(0.5, 2), (1.0, 4)]) == ((1.0, 4), (0.5, 2))
+    with pytest.raises(ValueError, match="width.*count"):
+        cap.parse_tiers("1.0:2")
+
+
+def test_validate_mix_rejects_bad_plans():
+    with pytest.raises(ValueError, match="width-1.0"):
+        cap.validate_mix(((0.5, 4),), 4)
+    with pytest.raises(ValueError, match="sum to"):
+        cap.validate_mix(((1.0, 2), (0.5, 2)), 6)
+    with pytest.raises(ValueError, match="duplicate"):
+        cap.validate_mix(((1.0, 2), (1.0, 2)), 4)
+    with pytest.raises(ValueError, match=r"outside \(0, 1\]"):
+        cap.validate_mix(((1.5, 4),), 4)
+
+
+def test_tier_plan_assignment_counts_and_determinism():
+    mix = ((1.0, 2), (0.5, 3), (0.25, 1))
+    p1 = cap.TierPlan.from_mix(mix, 6, seed=3)
+    p2 = cap.TierPlan.from_mix(mix, 6, seed=3)
+    assert np.array_equal(p1.assignment, p2.assignment)
+    counts = np.bincount(p1.assignment, minlength=3)
+    assert list(counts) == [2, 3, 1]
+    # ids_of restricted to a sampled subset preserves order
+    ids = np.array([5, 1, 3])
+    got = p1.ids_of(0, ids)
+    assert all(p1.assignment[i] == 0 for i in got)
+    assert list(got) == [i for i in ids if p1.assignment[i] == 0]
+
+
+def test_flconfig_validates_tiers():
+    with pytest.raises(ValueError, match="sum to"):
+        _fl("fedavg", tiers="1.0x2,0.5x2")
+    with pytest.raises(ValueError, match="tier_fusion"):
+        _fl("scaffold", tiers="1.0x3,0.5x3")
+    with pytest.raises(ValueError, match="tier_fusion"):
+        _fl("fedma", tiers="1.0x3,0.5x3")
+    cfg = _fl("fedavg", tiers="1.0x2,0.5x2,0.25x2")
+    assert cfg.tiers == ((1.0, 2), (0.5, 2), (0.25, 2))
+    assert _fl("fedavg").tiers is None
+
+
+def test_tier_fusion_capability_flags():
+    eligible = {m: methods_lib.get(m).tier_fusion
+                for m in methods_lib.available()}
+    assert eligible["scaffold"] is False     # server reads client state
+    assert eligible["fedma"] is False        # host matching, width-bound
+    for m in ("fedavg", "fedprox", "fed2", "fednova", "fedavgm",
+              "fedadam"):
+        assert eligible[m] is True, m
+
+
+# ---------------------------------------------------------------------------
+# Sub-model extraction: configs, slices, group-whole invariant
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_width_must_keep_whole_groups():
+    with pytest.raises(ValueError, match="whole feature groups"):
+        cap.cnn_tier_config(_GROUPED, 0.5)      # 0.5 * G=5 = 2.5
+    cfg = cap.cnn_tier_config(_GROUPED, 0.6)
+    assert cfg.fed2_groups == 3
+    assert cfg.n_classes == 6
+
+
+def test_tier_slices_match_tier_shapes():
+    for base, widths in ((_GROUPED, (1.0, 0.8, 0.6, 0.4, 0.2)),
+                         (_PLAIN, (1.0, 0.5, 0.25))):
+        gp = cnn_task(base).init_fn(jax.random.PRNGKey(0))
+        for w in widths:
+            model = cap.cnn_tier_model(base, w)
+            tp = cap.extract_params(gp, model.slices)
+            tshapes = jax.eval_shape(model.task.init_fn,
+                                     jax.random.PRNGKey(0))
+            got = jax.tree_util.tree_map(lambda l: l.shape, tp)
+            want = jax.tree_util.tree_map(lambda l: l.shape, tshapes)
+            assert got == want, (base.arch_id, w)
+
+
+def test_group_whole_slicing_invariant():
+    """Decoupled leaves are sliced WHOLE feature-groups at a time: along
+    the group axis a tier keeps exactly the first K blocks, never a
+    fraction of one — the invariant that keeps logit_signature pairing
+    exact (DESIGN.md §11)."""
+    gp_shapes = jax.eval_shape(cnn_task(_GROUPED).init_fn,
+                               jax.random.PRNGKey(0))
+    ga_tree = fusion_lib.cnn_group_axes(gp_shapes, _GROUPED)
+    for w, kept in ((0.6, 3), (0.2, 1)):
+        model = cap.cnn_tier_model(_GROUPED, w)
+        gas = jax.tree_util.tree_leaves(
+            ga_tree, is_leaf=lambda x: x is None or isinstance(
+                x, fusion_lib.GroupAxis))
+        sls = jax.tree_util.tree_leaves(
+            model.slices, is_leaf=lambda x: isinstance(x, cap.LeafSlice))
+        fls = jax.tree_util.tree_leaves(gp_shapes)
+        assert len(gas) == len(sls) == len(fls)
+        for ga, sl, fl in zip(gas, sls, fls):
+            if not isinstance(ga, fusion_lib.GroupAxis):
+                continue
+            block = fl.shape[ga.axis] // ga.n_groups
+            assert sl.group_axis == ga.axis
+            assert sl.kept == kept
+            # the kept indices along the group axis are exactly the
+            # first K whole blocks
+            np.testing.assert_array_equal(sl.idx[ga.axis],
+                                          np.arange(kept * block))
+
+
+def test_tier_logit_signatures_pair_exactly():
+    """Tier group g's logit set equals full-model group g's (contiguous
+    prefix groups keep the canonical class clusters)."""
+    from repro.core.grouping import GroupSpec
+    full = GroupSpec.contiguous(5, 10)
+    model = cap.cnn_tier_model(_GROUPED, 0.6)
+    tier = GroupSpec.contiguous(model.model_cfg.fed2_groups,
+                                model.model_cfg.n_classes)
+    for g in range(tier.n_groups):
+        assert tier.logit_signature(g) == full.logit_signature(g)
+
+
+def test_plain_flatten_boundary_rows_interleave():
+    """Non-grouped nets flatten (h, w, c) channels-fastest, so the first
+    fc's kept input rows are (row % C) < C_tier — extraction must agree
+    with actually running the sliced net."""
+    model = cap.cnn_tier_model(_PLAIN, 0.5)
+    s = model.slices["fcs"][0]["w"]
+    c_full, c_tier = 40, 20           # vgg9.reduced last conv: 40 ch
+    rows = s.idx[0]
+    assert np.array_equal(rows, np.nonzero(
+        (np.arange(len(rows) * 2) % c_full) < c_tier)[0])
+    # end to end: tier forward == full forward restricted to kept
+    # channels is not an identity (relu mixing), but shapes and
+    # finiteness must hold
+    gp = cnn_task(_PLAIN).init_fn(jax.random.PRNGKey(0))
+    tp = cap.extract_params(gp, model.slices)
+    from repro.models.cnn import apply_cnn
+    logits = apply_cnn(tp, model.model_cfg, jnp.ones((2, 32, 32, 3)))
+    assert logits.shape == (2, 10)            # plain tiers keep the head
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_k1_tier_squeezes_grouped_dense():
+    """A width-0.2 tier of the G=5 net keeps one group; its grouped
+    dense layers become plain dense (group axis squeezed) and extraction
+    fills them with group 0's block."""
+    model = cap.cnn_tier_model(_GROUPED, 0.2)
+    assert model.model_cfg.fed2_groups == 1
+    gp = cnn_task(_GROUPED).init_fn(jax.random.PRNGKey(0))
+    tp = cap.extract_params(gp, model.slices)
+    full_logits_w = gp["fcs"][-1]["w"]            # (5, gi, go)
+    np.testing.assert_array_equal(np.asarray(tp["fcs"][-1]["w"]),
+                                  np.asarray(full_logits_w[0]))
+
+
+def test_masked_loss_ignores_dropped_classes():
+    model = cap.cnn_tier_model(_GROUPED, 0.6)     # keeps classes 0..5
+    gp = cnn_task(_GROUPED).init_fn(jax.random.PRNGKey(0))
+    tp = cap.extract_params(gp, model.slices)
+    x = jnp.ones((4, 32, 32, 3))
+    in_cls = {"images": x, "labels": jnp.array([0, 1, 2, 3])}
+    mixed = {"images": x, "labels": jnp.array([0, 1, 2, 9])}
+    dropped = {"images": x, "labels": jnp.array([7, 8, 9, 9])}
+    l_in = float(model.task.loss_fn(tp, in_cls))
+    l_mx = float(model.task.loss_fn(tp, mixed))
+    l_dr = float(model.task.loss_fn(tp, dropped))
+    assert np.isfinite(l_in) and np.isfinite(l_mx)
+    assert l_dr == 0.0                 # nothing in the kept clusters
+    # masking really drops the out-of-tier example: the mixed batch's
+    # loss is the mean over its three in-tier examples only
+    l3 = float(model.task.loss_fn(
+        tp, {"images": x[:3], "labels": jnp.array([0, 1, 2])}))
+    assert l_mx == pytest.approx(l3 * 1.0, rel=1e-6)
+
+
+def test_uplink_bytes_scale_quadratically():
+    full = cap.cnn_tier_model(_PLAIN, 1.0).param_bytes
+    quarter = cap.cnn_tier_model(_PLAIN, 0.25).param_bytes
+    assert quarter / full < 0.1        # ~w^2: 0.25 -> ~1/16 dense
+
+
+# ---------------------------------------------------------------------------
+# The degenerate path: single width-1.0 tier == homogeneous, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", methods_lib.available())
+def test_single_full_width_tier_bit_identical(method):
+    """A tiers config with one width-1.0 tier must be BIT-identical to
+    the homogeneous engine for every registered method (including the
+    tier-ineligible scaffold/fedma — the plan is degenerate, so no
+    tiered machinery runs)."""
+    grouped = methods_lib.get(method).uses_groups
+    base = (vgg9.reduced(n_classes=10, fed2_groups=2, decouple=1,
+                         norm="gn") if grouped else _PLAIN)
+    parts = nxc_partition(_DS.labels, 3, 5, 10, seed=0)
+    kw = dict(population=3, rounds=2)
+    h_t = run_federated(cnn_task(base), _fl(method, tiers="1.0x3", **kw),
+                        parts, _get_batch, _TEST_BATCHES)
+    h_h = run_federated(cnn_task(base), _fl(method, **kw),
+                        parts, _get_batch, _TEST_BATCHES)
+    assert h_t["acc"] == h_h["acc"]
+    for a, b in zip(jax.tree_util.tree_leaves(h_t["final_params"]),
+                    jax.tree_util.tree_leaves(h_h["final_params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forced_tiered_engine_matches_homogeneous_round():
+    """Driving the ACTUAL tiered machinery with one width-1.0 tier (no
+    degenerate shortcut) reproduces the homogeneous round to float
+    tolerance — the overlap-aware combine with full coverage is the
+    plain weighted mean."""
+    task = cnn_task(_PLAIN)
+    parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)
+    fl = _fl("fedavg", population=4, rounds=1)
+    gp = task.init_fn(jax.random.PRNGKey(0))
+    meth = methods_lib.get("fedavg")
+    plan = cap.TierPlan.from_mix(((1.0, 4),), 4, seed=0)
+    tiered = cap.make_tiered_engine(task, fl, gp, plan, method=meth)
+    pop = Population.from_parts(parts)
+    pop.clients = tiered.init_population_state(gp, 4)
+    sstate = tiered.init_server_state(gp)
+    _, g_t = cap.run_tiered_round(tiered, pop, meth, sstate, gp,
+                                  np.arange(4), _get_batch, 2, fl,
+                                  np.random.default_rng(0))
+
+    engine = make_round_engine(task, fl, gp,
+                               method=methods_lib.get("fedavg"))
+    batches = _pack_client_batches(parts, _get_batch, 2, 8,
+                                   np.random.default_rng(0))
+    state = {"server": engine.init_server_state(gp),
+             "clients": engine.init_client_states(gp, 4)}
+    _, g_h = engine.run_round(state, gp, batches, weights=pop.weights)
+    for a, b in zip(jax.tree_util.tree_leaves(g_t),
+                    jax.tree_util.tree_leaves(g_h)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Overlap-aware fusion semantics
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_renormalization_matches_manual_average():
+    """Two tiers, known weights: covered coordinates average only over
+    their holders; coordinates only the full tier holds carry its mean
+    alone."""
+    task = cnn_task(_PLAIN)
+    parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)
+    fl = _fl("fedavg", population=4, rounds=1)
+    gp = task.init_fn(jax.random.PRNGKey(0))
+    meth = methods_lib.get("fedavg")
+    plan = cap.TierPlan.from_mix(((1.0, 2), (0.5, 2)), 4, seed=0)
+    tiered = cap.make_tiered_engine(task, fl, gp, plan, method=meth)
+    pop = Population.from_parts(parts)
+    pop.tiers = plan.assignment
+    sstate = tiered.init_server_state(gp)
+    _, g_t = cap.run_tiered_round(tiered, pop, meth, sstate, gp,
+                                  np.arange(4), _get_batch, 2, fl,
+                                  np.random.default_rng(0))
+
+    # manual: run each tile by hand with the same rng stream
+    rng = np.random.default_rng(0)
+    means, masses = [], []
+    for t, tile in enumerate(tiered.tiles):
+        tids = plan.ids_of(t, np.arange(4))
+        w = pop.weights[tids]
+        b = _pack_client_batches([parts[i] for i in tids], _get_batch,
+                                 2, 8, rng)
+        tg = cap.extract_params(gp, tile.model.slices)
+        _, fo = tile.engine.run_tile((), (), tg, b, weights=w)
+        means.append(fo)
+        masses.append(float(w.sum()))
+    w0, w1 = masses
+    full_c1 = np.asarray(jax.tree_util.tree_leaves(means[0])[0])
+    half_c1 = np.asarray(jax.tree_util.tree_leaves(means[1])[0])
+    got_c1 = np.asarray(jax.tree_util.tree_leaves(g_t)[0])
+    k = half_c1.shape[-1]
+    np.testing.assert_allclose(
+        got_c1[..., :k], (w0 * full_c1[..., :k] + w1 * half_c1)
+        / (w0 + w1), atol=1e-6)
+    np.testing.assert_allclose(got_c1[..., k:], full_c1[..., k:],
+                               atol=1e-6)
+
+
+def test_uncovered_region_keeps_previous_global():
+    """If no sampled client holds a region this round (the full tier sat
+    out), that region keeps the previous global values bit-for-bit."""
+    task = cnn_task(_PLAIN)
+    parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)
+    fl = _fl("fedavg", population=4, rounds=1)
+    gp = task.init_fn(jax.random.PRNGKey(0))
+    meth = methods_lib.get("fedavg")
+    plan = cap.TierPlan.from_mix(((1.0, 2), (0.5, 2)), 4, seed=0)
+    tiered = cap.make_tiered_engine(task, fl, gp, plan, method=meth)
+    pop = Population.from_parts(parts)
+    pop.tiers = plan.assignment
+    sstate = tiered.init_server_state(gp)
+    half_ids = plan.ids_of(1)            # only half-width clients train
+    _, g_t = cap.run_tiered_round(tiered, pop, meth, sstate, gp,
+                                  half_ids, _get_batch, 2, fl,
+                                  np.random.default_rng(0))
+    got = np.asarray(jax.tree_util.tree_leaves(g_t)[0])
+    ref = np.asarray(jax.tree_util.tree_leaves(gp)[0])
+    k = got.shape[-1] // 2
+    np.testing.assert_array_equal(got[..., k:], ref[..., k:])
+    assert np.abs(got[..., :k] - ref[..., :k]).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end heterogeneous runs
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_run_fedavg_plain():
+    parts = nxc_partition(_DS.labels, 6, 5, 10, seed=0)
+    h = run_federated(cnn_task(_PLAIN),
+                      _fl("fedavg", tiers="1.0x2,0.5x2,0.25x2"),
+                      parts, _get_batch, _TEST_BATCHES)
+    assert len(h["acc"]) == 2
+    assert all(np.isfinite(a) for a in h["acc"])
+
+
+def test_hetero_run_fed2_grouped_with_presence():
+    """Group-whole tiers compose with presence-weighted fed2 (Eq. 19
+    pairing is per-group, so dropped groups just have zero presence)."""
+    from repro.core.grouping import GroupSpec
+    parts = nxc_partition(_DS.labels, 6, 5, 10, seed=0)
+    spec = GroupSpec.contiguous(5, 10)
+    counts = np.stack([np.bincount(_DS.labels[p], minlength=10)
+                       for p in parts])
+    h = run_federated(cnn_task(_GROUPED),
+                      _fl("fed2", tiers=((1.0, 2), (0.6, 2), (0.2, 2))),
+                      parts, _get_batch, _TEST_BATCHES,
+                      class_counts=counts, group_spec=spec)
+    assert len(h["acc"]) == 2
+    assert all(np.isfinite(a) for a in h["acc"])
+
+
+def test_hetero_run_full_sampler_small_cohort():
+    """Full participation over a tiered population with a small
+    cohort_size: tiles are sized by tier counts, so every participant
+    fits regardless of the cohort cap."""
+    parts = nxc_partition(_DS.labels, 6, 5, 10, seed=0)
+    h = run_federated(cnn_task(_PLAIN),
+                      _fl("fedavg", tiers="1.0x2,0.5x2,0.25x2",
+                          cohort_size=2, sampler="full"),
+                      parts, _get_batch, _TEST_BATCHES)
+    assert len(h["acc"]) == 2
+    assert all(len(p) == 6 for p in h["participants"])
+
+
+def test_hetero_run_with_uniform_sampler():
+    """Partial participation over a tiered population: sampled ids split
+    by tier, each tile zero-weight pads to its width."""
+    parts = nxc_partition(_DS.labels, 6, 5, 10, seed=0)
+    h = run_federated(cnn_task(_PLAIN),
+                      _fl("fedavg", tiers="1.0x2,0.5x2,0.25x2",
+                          cohort_size=4, sampler="uniform"),
+                      parts, _get_batch, _TEST_BATCHES)
+    assert len(h["acc"]) == 2
+    assert all(len(p) == 4 for p in h["participants"])
+
+
+def test_tiered_scenario_runs_end_to_end():
+    from repro.fl import scenarios as scenarios_lib
+    spec = scenarios_lib.get("nxc2_fedavg_tiers").override(
+        rounds=2, train_size=300, test_size=80)
+    rec = scenarios_lib.run_scenario(spec)
+    assert len(rec.acc) == 2
+    assert rec.tiers == [[1.0, 2], [0.5, 2], [0.25, 2]]
+
+
+def test_lm_task_refuses_tiers():
+    from repro.configs import get_config
+    from repro.fl.runtime import lm_task
+    task = lm_task(get_config("llama3.2-1b", reduced=True))
+    fl = _fl("fedavg", population=4, tiers="1.0x2,0.5x2")
+    plan = cap.TierPlan.from_mix(fl.tiers, 4, seed=0)
+    with pytest.raises(ValueError, match="tier_fn"):
+        cap.make_tiered_engine(task, fl, None, plan,
+                               method=methods_lib.get("fedavg"))

@@ -1,0 +1,156 @@
+"""checkpoint/io.py: save/restore round-trips are bit-identical for
+pytrees with mixed dtypes, and a mid-training ``run_federated`` resume
+(checkpoint_dir + resume=True) continues bit-identically to the
+uninterrupted run — params, rng stream, and per-round accuracies."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs import vgg9
+from repro.data.synthetic import make_image_dataset, nxc_partition
+from repro.fl.runtime import FLConfig, cnn_task, run_federated
+
+_DS = make_image_dataset(200, n_classes=10, seed=0, noise=0.8)
+_TEST = make_image_dataset(64, n_classes=10, seed=9, noise=0.8)
+
+
+def _get_batch(sel):
+    return {"images": jnp.asarray(_DS.images[sel]),
+            "labels": jnp.asarray(_DS.labels[sel])}
+
+
+_TEST_BATCHES = [{"images": jnp.asarray(_TEST.images),
+                  "labels": jnp.asarray(_TEST.labels)}]
+
+
+def _mixed_tree():
+    return {
+        "w": jnp.asarray(np.random.default_rng(0).normal(size=(3, 5)),
+                         jnp.float32),
+        "h": jnp.asarray(np.arange(7, dtype=np.float16)),
+        "steps": jnp.asarray(np.int32(17)),
+        "ids": jnp.asarray(np.arange(4, dtype=np.int8)),
+        "mask": jnp.asarray(np.array([True, False, True])),
+        "nested": [{"b": jnp.zeros((2, 2), jnp.float32)},
+                   (jnp.ones((3,), jnp.float16),)],
+    }
+
+
+def test_roundtrip_bit_identical_mixed_dtypes(tmp_path):
+    tree = _mixed_tree()
+    ckpt_io.save_checkpoint(str(tmp_path), tree, step=3,
+                            extra={"note": "x"})
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    back = ckpt_io.load_checkpoint(str(tmp_path), like)
+    flat_a = jax.tree_util.tree_flatten(tree)
+    flat_b = jax.tree_util.tree_flatten(back)
+    assert flat_a[1] == flat_b[1]                  # same treedef
+    for a, b in zip(flat_a[0], flat_b[0]):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt_io.checkpoint_step(str(tmp_path)) == 3
+
+
+def test_load_checkpoint_rejects_missing_and_mismatched(tmp_path):
+    tree = {"a": jnp.ones((2,))}
+    ckpt_io.save_checkpoint(str(tmp_path), tree)
+    with pytest.raises(KeyError, match="missing"):
+        ckpt_io.load_checkpoint(str(tmp_path),
+                                {"a": jnp.ones((2,)), "b": jnp.ones(1)})
+    with pytest.raises(ValueError, match="shape"):
+        ckpt_io.load_checkpoint(str(tmp_path), {"a": jnp.ones((3,))})
+
+
+def test_checkpoint_exists(tmp_path):
+    assert not ckpt_io.checkpoint_exists(str(tmp_path))
+    ckpt_io.save_checkpoint(str(tmp_path), {"a": jnp.ones(1)})
+    assert ckpt_io.checkpoint_exists(str(tmp_path))
+
+
+def _fl(method, rounds, **kw):
+    return FLConfig(population=4, rounds=rounds, local_epochs=1,
+                    steps_per_epoch=2, batch_size=8, lr=0.02,
+                    momentum=0.9, method=method, seed=0, **kw)
+
+
+@pytest.mark.parametrize("method,sampler", [
+    ("fedavgm", "uniform"),      # server state + rng-driven sampling
+    ("scaffold", "full"),        # per-client population state
+])
+def test_mid_training_resume_is_bit_identical(tmp_path, method, sampler):
+    """Run 4 rounds straight vs 2 rounds (checkpointing) + a fresh
+    ``run_federated`` resuming for the last 2: final params bit-equal,
+    resumed accuracies equal the tail of the straight run."""
+    cfg = vgg9.reduced(n_classes=10, fed2_groups=0, norm="none")
+    parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)
+    kw = {}
+    if sampler == "uniform":
+        kw = dict(sampler="uniform", cohort_size=2)
+    task = cnn_task(cfg)
+    straight = run_federated(task, _fl(method, 4, **kw), parts,
+                             _get_batch, _TEST_BATCHES)
+
+    ck = str(tmp_path / "ck")
+    run_federated(task, _fl(method, 2, **kw), parts, _get_batch,
+                  _TEST_BATCHES, checkpoint_dir=ck)
+    assert ckpt_io.checkpoint_step(ck) == 2
+    resumed = run_federated(task, _fl(method, 4, **kw), parts,
+                            _get_batch, _TEST_BATCHES,
+                            checkpoint_dir=ck, resume=True)
+    assert resumed["round"] == [2, 3]
+    assert resumed["acc"] == straight["acc"][2:]
+    for a, b in zip(jax.tree_util.tree_leaves(resumed["final_params"]),
+                    jax.tree_util.tree_leaves(straight["final_params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_of_finished_run_reports_final_eval(tmp_path):
+    """Rerunning a completed job with resume=True must not return an
+    empty history (callers index h["acc"][-1]): it reports one eval of
+    the restored model and trains nothing."""
+    cfg = vgg9.reduced(n_classes=10, fed2_groups=0, norm="none")
+    parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)
+    ck = str(tmp_path / "ck")
+    first = run_federated(cnn_task(cfg), _fl("fedavg", 2), parts,
+                          _get_batch, _TEST_BATCHES, checkpoint_dir=ck)
+    again = run_federated(cnn_task(cfg), _fl("fedavg", 2), parts,
+                          _get_batch, _TEST_BATCHES, checkpoint_dir=ck,
+                          resume=True)
+    assert again["round"] == [1]
+    assert again["acc"][-1] == first["acc"][-1]
+    for a, b in zip(jax.tree_util.tree_leaves(again["final_params"]),
+                    jax.tree_util.tree_leaves(first["final_params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_every_validated(tmp_path):
+    cfg = vgg9.reduced(n_classes=10, fed2_groups=0, norm="none")
+    parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        run_federated(cnn_task(cfg), _fl("fedavg", 2), parts, _get_batch,
+                      _TEST_BATCHES, checkpoint_dir=str(tmp_path),
+                      checkpoint_every=0)
+
+
+def test_prune_spares_unrelated_npz(tmp_path):
+    """checkpoint_dir may hold unrelated .npz files; saving must never
+    delete them — only its own superseded params archives."""
+    other = tmp_path / "dataset.npz"
+    np.savez(str(other), x=np.arange(3))
+    ckpt_io.save_checkpoint(str(tmp_path), {"a": jnp.ones(2)}, step=1)
+    ckpt_io.save_checkpoint(str(tmp_path), {"a": jnp.ones(2)}, step=2)
+    assert other.exists()
+    assert (tmp_path / "params-2.npz").exists()
+    assert not (tmp_path / "params-1.npz").exists()
+
+
+def test_resume_without_checkpoint_starts_fresh(tmp_path):
+    cfg = vgg9.reduced(n_classes=10, fed2_groups=0, norm="none")
+    parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)
+    h = run_federated(cnn_task(cfg), _fl("fedavg", 2), parts, _get_batch,
+                      _TEST_BATCHES, checkpoint_dir=str(tmp_path / "nope"),
+                      resume=True)
+    assert h["round"] == [0, 1]

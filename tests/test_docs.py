@@ -17,8 +17,10 @@ def test_design_md_exists_with_cited_sections():
     sections = _design_sections()
     # the sections the codebase cites (§6 = method protocol; the former
     # §7 Data/§7.1 Synthetic renumbered to §8/§8.1 when §6 was inserted;
-    # §9 = population & participation; §10 = scenarios & evaluation)
-    for must in ("3", "5", "6", "8.1", "9", "10", "Shape-applicability"):
+    # §9 = population & participation; §10 = scenarios & evaluation;
+    # §11 = heterogeneous capacity)
+    for must in ("3", "5", "6", "8.1", "9", "10", "11",
+                 "Shape-applicability"):
         assert must in sections, (must, sections)
 
 
@@ -84,6 +86,50 @@ def test_design_documents_claim_thresholds():
     s10 = text.split("## §10")[1].split("\n## ")[0]
     for needle in ("paper_claims", "rounds_to", "fedavg", "dirichlet"):
         assert needle in s10, f"DESIGN.md §10 lost {needle!r}"
+
+
+def test_design_documents_heterogeneous_capacity():
+    """DESIGN.md §11 must keep describing the tier spec, the group-whole
+    slicing invariant, and the overlap-aware fusion renormalization —
+    the contracts tests/test_capacity.py pins in code."""
+    text = (ROOT / "DESIGN.md").read_text()
+    s11 = text.split("## §11")[1].split("\n## ")[0]
+    for needle in ("CapacityTier", "group", "coverage", "renormaliz",
+                   "tier_fusion", "logit_signature", "check_drift"):
+        assert needle in s11, f"DESIGN.md §11 lost {needle!r}"
+
+
+def test_readme_tier_table_covers_registered_widths():
+    """The README tier table must carry a row for every width used by a
+    registered tiered scenario, plus the uplink column header."""
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.fl import scenarios
+    readme = (ROOT / "README.md").read_text()
+    assert "| width |" in readme, "README lost the capacity-tier table"
+    assert "uplink" in readme
+    widths = set()
+    for n in scenarios.available():
+        widths |= {w for w, _ in scenarios.get(n).tiers}
+    assert widths, "no registered tiered scenarios"
+    for w in widths:
+        assert f"| `{w:g}` |" in readme, \
+            f"README tier table misses width {w:g}"
+
+
+def test_makefile_has_tier_and_drift_targets():
+    mk = (ROOT / "Makefile").read_text()
+    for target in ("bench-tiers:", "check-drift:"):
+        assert target in mk, f"Makefile lost {target}"
+    assert "check_drift.py" in mk
+
+
+def test_ci_has_perf_drift_gate_and_concurrency():
+    ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
+    assert "perf-drift:" in ci, "CI lost the blocking perf-drift job"
+    assert "check-drift" in ci
+    assert "concurrency:" in ci and "cancel-in-progress: true" in ci
+    assert "pytest-xdist" in ci and "-n auto" in ci
 
 
 def test_readme_quotes_tier1_verify():

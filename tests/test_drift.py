@@ -1,0 +1,154 @@
+"""The perf-drift comparer (benchmarks/check_drift.py): green on
+identical lowering records, red on flops/collective/bytes drift and on
+fresh records with no committed baseline — the demonstration that the
+CI perf-drift gate catches an injected flops regression."""
+import copy
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                       / "benchmarks"))
+import check_drift  # noqa: E402
+
+_REC = {
+    "kind": "fl_round", "method": "fedavg", "family": "cnn",
+    "mesh": "1x1", "status": "ok", "flops": 594008832.0,
+    "use_kernel": False,
+    "memory": {"temp_bytes": 28014168, "argument_bytes": 872344,
+               "output_bytes": 85768},
+    "collectives": {
+        "all-reduce": {"bytes": 1024, "count": 1},
+        "all-gather": {"bytes": 0, "count": 0},
+        "reduce-scatter": {"bytes": 0, "count": 0},
+        "all-to-all": {"bytes": 0, "count": 0},
+        "collective-permute": {"bytes": 0, "count": 0},
+    },
+    "host_gather_bytes": 0,
+    "lower_s": 0.7, "compile_s": 2.4,
+}
+
+
+def _write(d, name, rec):
+    d.mkdir(parents=True, exist_ok=True)
+    (d / name).write_text(json.dumps(rec))
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    fresh, committed = tmp_path / "fresh", tmp_path / "committed"
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", _REC)
+    _write(committed, "dryrun_fl_round_fedavg_cnn_1x1.json", _REC)
+    return fresh, committed
+
+
+def test_identical_records_pass(dirs):
+    fresh, committed = dirs
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    assert res["compared"] == 1
+    assert res["drift"] == [] and res["missing_baseline"] == []
+    assert check_drift.main(["--fresh", str(fresh),
+                             "--committed", str(committed)]) == 0
+
+
+def test_injected_flops_regression_goes_red(dirs):
+    """The acceptance demonstration: a flops-only change — exactly what
+    an accidental recompute or a dropped fusion would produce — fails
+    the gate."""
+    fresh, committed = dirs
+    worse = copy.deepcopy(_REC)
+    worse["flops"] *= 1.20
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", worse)
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    assert [(f, d) for f, d, _ in res["drift"]] == \
+        [("dryrun_fl_round_fedavg_cnn_1x1.json", "flops")]
+    assert check_drift.main(["--fresh", str(fresh),
+                             "--committed", str(committed)]) == 1
+
+
+def test_collective_count_drift_goes_red(dirs):
+    fresh, committed = dirs
+    worse = copy.deepcopy(_REC)
+    worse["collectives"]["all-reduce"]["count"] = 2
+    worse["collectives"]["all-reduce"]["bytes"] = 2048
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", worse)
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    fields = {d for _, d, _ in res["drift"]}
+    assert fields == {"collectives.all-reduce.count",
+                      "collectives.all-reduce.bytes"}
+
+
+def test_temp_bytes_tolerated_within_rtol(dirs):
+    """XLA temp-buffer totals wobble with scheduling; small changes stay
+    green, large ones go red."""
+    fresh, committed = dirs
+    ok = copy.deepcopy(_REC)
+    ok["memory"]["temp_bytes"] = int(_REC["memory"]["temp_bytes"] * 1.05)
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", ok)
+    assert check_drift.compare_dirs(str(fresh), str(committed))["drift"] \
+        == []
+    bad = copy.deepcopy(_REC)
+    bad["memory"]["temp_bytes"] = int(_REC["memory"]["temp_bytes"] * 1.5)
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", bad)
+    assert check_drift.compare_dirs(str(fresh),
+                                    str(committed))["drift"] != []
+
+
+def test_wall_clock_fields_are_ignored(dirs):
+    fresh, committed = dirs
+    rec = copy.deepcopy(_REC)
+    rec["lower_s"], rec["compile_s"] = 99.0, 99.0
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", rec)
+    assert check_drift.compare_dirs(str(fresh), str(committed))["drift"] \
+        == []
+
+
+def test_fresh_without_baseline_fails_and_committed_only_skips(dirs):
+    fresh, committed = dirs
+    _write(fresh, "dryrun_fl_round_new_cnn_1x1.json", _REC)
+    _write(committed, "dryrun_fl_round_old_cnn_16x16.json", _REC)
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    assert res["missing_baseline"] == ["dryrun_fl_round_new_cnn_1x1.json"]
+    assert res["skipped"] == ["dryrun_fl_round_old_cnn_16x16.json"]
+    assert check_drift.main(["--fresh", str(fresh),
+                             "--committed", str(committed)]) == 1
+
+
+def test_lost_case_of_covered_mesh_goes_red(dirs):
+    """A committed baseline of a mesh the fresh run DID cover that the
+    fresh run failed to produce means the matrix lost a case (e.g. the
+    tier matrix was switched off) — that must fail, not skip."""
+    fresh, committed = dirs
+    _write(committed, "dryrun_fl_tier_fed2_w020_1x1.json", _REC)
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    assert res["lost"] == ["dryrun_fl_tier_fed2_w020_1x1.json"]
+    assert res["skipped"] == []
+    assert check_drift.main(["--fresh", str(fresh),
+                             "--committed", str(committed)]) == 1
+
+
+def test_status_flip_goes_red(dirs):
+    fresh, committed = dirs
+    worse = copy.deepcopy(_REC)
+    worse["status"] = "error"
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", worse)
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    assert ("dryrun_fl_round_fedavg_cnn_1x1.json", "status",
+            "'ok' -> 'error'") in res["drift"]
+
+
+def test_write_baseline_updates_committed(dirs):
+    fresh, committed = dirs
+    worse = copy.deepcopy(_REC)
+    worse["flops"] *= 2
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", worse)
+    assert check_drift.main(["--fresh", str(fresh),
+                             "--committed", str(committed),
+                             "--write-baseline"]) == 0
+    with open(committed / "dryrun_fl_round_fedavg_cnn_1x1.json") as f:
+        assert json.load(f)["flops"] == worse["flops"]
+    # and the gate is green again
+    assert check_drift.main(["--fresh", str(fresh),
+                             "--committed", str(committed)]) == 0
