@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-claims smoke smoke-scenario scenarios bench-infra \
-	bench-cohort bench-eval bench-tiers dryrun-fl check-drift
+	bench-cohort bench-eval bench-tiers bench-async dryrun-fl check-drift
 
 # the tier-1 gate (ROADMAP.md)
 test:
@@ -60,6 +60,11 @@ bench-eval:
 # baseline (fl/capacity.py, DESIGN.md §11)
 bench-tiers:
 	$(PY) benchmarks/flbench.py bench_tiers
+
+# buffered-async vs sync simulated time-to-accuracy under heavy-tail
+# client latencies (fl/async_engine.py, DESIGN.md §12)
+bench-async:
+	$(PY) benchmarks/flbench.py bench_async
 
 bench-infra:
 	REPRO_BENCH_SET=infra $(PY) -m benchmarks.run

@@ -436,6 +436,9 @@ def bench_eval(*, n_eval=4096, eval_batches=(128, 512), repeats=None) \
         acc = evaluation_lib.accuracy(np.asarray(conf))
         recs.append({
             "eval_batch": eb, "n_eval": n_eval, "repeats": repeats,
+            "engine_path": ("host_dispatch" if tiles.host_dispatch
+                            else "fused"),
+            "n_tiles": tiles.n_tiles,
             "host_loop_s": round(host_s, 3),
             "engine_s": round(engine_s, 3),
             "host_evals_per_s": round(repeats / host_s, 3),
@@ -451,16 +454,109 @@ def bench_eval(*, n_eval=4096, eval_batches=(128, 512), repeats=None) \
     return recs
 
 
+def bench_async(*, population=8, cohort_size=4, buffer_k=2,
+                staleness="polynomial(0.5)", latency="pareto(1.1)",
+                rounds=None, steps_per_epoch=4, batch=16,
+                method="fedavg") -> dict:
+    """Buffered-async vs sync under stragglers (fl/async_engine.py,
+    DESIGN.md §12): the same population/partition/net runs once in
+    lockstep rounds and once buffered-async, under the SAME
+    seed-deterministic heavy-tail latency trace. The sync barrier pays
+    the slowest sampled client every round (``sync_round_times``); the
+    async driver keeps ``cohort_size`` clients in flight and fuses every
+    ``buffer_k`` arrivals, so its simulated clock advances at the
+    buffer's pace. Both runs get the same client-update budget
+    (``rounds * cohort_size`` updates = ``rounds * C / K`` fusion
+    events) and are compared on simulated time to the shared target
+    accuracy (the weaker run's best — both runs provably reach it).
+    The partition is IID: this bench isolates the STRAGGLER effect (the
+    clock), so both accuracy curves must be smooth enough for
+    time-to-target to mean something at laptop scale — heterogeneity
+    orderings stay with the scenario matrix/claims suite."""
+    import jax
+    from repro.fl.async_engine import LatencyTrace, sync_round_times
+
+    rounds = rounds or (8 if QUICK else 14)
+    events = rounds * cohort_size // buffer_k
+    ds, test = dataset()
+    parts = nxc_partition(ds.labels, population, N_CLASSES, N_CLASSES,
+                          seed=0)
+
+    def get_batch(sel):
+        return {"images": jnp.asarray(ds.images[sel]),
+                "labels": jnp.asarray(ds.labels[sel])}
+
+    test_batches = [{"images": jnp.asarray(test.images),
+                     "labels": jnp.asarray(test.labels)}]
+    cfg = model_cfg("vgg9", method)
+    task = cnn_task(cfg)
+
+    def timed_run(**kw):
+        fl = FLConfig(population=population, cohort_size=cohort_size,
+                      sampler="uniform", local_epochs=1,
+                      steps_per_epoch=steps_per_epoch, batch_size=batch,
+                      lr=0.008, momentum=0.9, method=method, seed=0, **kw)
+        t0 = time.time()
+        h = run_federated(task, fl, parts, get_batch, test_batches,
+                          latency=("zero" if fl.mode == "sync"
+                                   else latency))
+        jax.block_until_ready(h["final_params"])
+        return h, time.time() - t0
+
+    h_sync, sync_s = timed_run(rounds=rounds)
+    h_async, async_s = timed_run(rounds=events, mode="async",
+                                 buffer_k=buffer_k, staleness=staleness)
+
+    # simulated clocks under the ONE committed trace: sync rounds end at
+    # the cumulative per-round straggler max, async events at their
+    # buffer-filling arrival
+    trace = LatencyTrace.make(latency, population=population, seed=0)
+    sync_t = np.cumsum(sync_round_times(trace, h_sync["participants"]))
+    async_t = np.asarray(h_async["sim_time"])
+
+    def time_to(ts, accs, target):
+        for t, a in zip(ts, accs):
+            if a >= target:
+                return float(t)
+        return None
+
+    target = round(min(max(h_sync["acc"]), max(h_async["acc"])), 4)
+    sync_tt = time_to(sync_t, h_sync["acc"], target)
+    async_tt = time_to(async_t, h_async["acc"], target)
+    rec = {"name": "flbench_async", "population": population,
+           "cohort_size": cohort_size, "buffer_k": buffer_k,
+           "method": method, "staleness": staleness, "latency": latency,
+           "rounds_sync": rounds, "events_async": events,
+           "sync_s": round(sync_s, 3), "async_s": round(async_s, 3),
+           "sync_rounds_per_s": round(rounds / sync_s, 3),
+           "async_events_per_s": round(events / async_s, 3),
+           "target_acc": target,
+           "sync_sim_time_to_target": round(sync_tt, 3),
+           "async_sim_time_to_target": round(async_tt, 3),
+           "sim_speedup_to_target": round(sync_tt / async_tt, 3),
+           "sync_sim_total": round(float(sync_t[-1]), 3),
+           "async_sim_total": round(float(async_t[-1]), 3),
+           "sync_final_acc": round(float(h_sync["acc"][-1]), 4),
+           "async_final_acc": round(float(h_async["acc"][-1]), 4),
+           "max_staleness": int(max(max(s) for s in
+                                    h_async["staleness"]))}
+    os.makedirs(ARTIFACTS_PERF, exist_ok=True)
+    with open(os.path.join(ARTIFACTS_PERF, "flbench_async.json"),
+              "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
 BENCHES = {"bench_engine": None, "bench_methods": None,
            "bench_cohort": None, "bench_eval": None,
-           "bench_tiers": None}  # CLI subcommands
+           "bench_tiers": None, "bench_async": None}  # CLI subcommands
 
 
 def main(argv=None):
     import sys
     chosen = (argv if argv is not None else sys.argv[1:]) or \
         ["bench_engine", "bench_methods", "bench_cohort", "bench_eval",
-         "bench_tiers"]
+         "bench_tiers", "bench_async"]
     bad = [c for c in chosen if c not in BENCHES]
     if bad:
         raise SystemExit(f"unknown bench {bad}; available: "
@@ -492,6 +588,12 @@ def main(argv=None):
               f"rounds_per_s={r['tier_rounds_per_s']}"
               f"(hom {r['hom_rounds_per_s']}),"
               f"uplink_frac={r['uplink_frac']}")
+    if "bench_async" in chosen:
+        r = bench_async()
+        print(f"fl_async,{round(1e6 * r['async_s'] / r['events_async'])},"
+              f"sim_speedup_to_target={r['sim_speedup_to_target']:.2f}x,"
+              f"target_acc={r['target_acc']},"
+              f"max_staleness={r['max_staleness']}")
 
 
 if __name__ == "__main__":

@@ -50,14 +50,29 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 PyTree = Any
 
 
+# single-device tile-count threshold above which ``stage`` selects the
+# per-tile host-dispatch path: the fused lax.map program WINS at a few
+# wide tiles (1.6-1.7x at 8x512 in flbench_eval.json) but its sequential
+# device loop LOSES at many small ones (0.70x at 32x128 — the ROADMAP
+# eval gap), where per-dispatch overhead is cheaper than the loop's.
+# Multi-device meshes ignore it (tiles evaluate in parallel there).
+HOST_DISPATCH_TILES = 16
+
+
 @dataclasses.dataclass(frozen=True)
 class EvalTiles:
     """The staged eval set: every batch leaf stacked to (T, B, ...) plus
     the (T, B) padding mask. ``n_real`` is the true sample count (the
-    mask's support)."""
+    mask's support). ``host_dispatch`` is the path selection made at
+    staging time (single device, > HOST_DISPATCH_TILES tiles): the
+    engine then dispatches one jitted per-tile program per tile and
+    accumulates counts on device, instead of one fused lax.map program —
+    identical counts (small-integer f32 sums are exact in any order),
+    different dispatch economics."""
     batches: dict
     mask: jnp.ndarray
     n_real: int
+    host_dispatch: bool = False
 
     @property
     def n_tiles(self) -> int:
@@ -99,12 +114,16 @@ def stage(batches: list, *, tile: int, mesh=None) -> EvalTiles:
     tiles = {k: to_tiles(v) for k, v in cat.items()}
     mask = mask.reshape(n_tiles, tile)
     if mesh is not None:
+        dsize = (mesh.shape["data"] if "data" in mesh.axis_names else 1)
         shard = lambda a: jax.device_put(  # noqa: E731
             a, NamedSharding(mesh, P("data", *([None] * (a.ndim - 1)))))
     else:
+        dsize = 1
         shard = jnp.asarray
+    host_dispatch = dsize == 1 and n_tiles > HOST_DISPATCH_TILES
     return EvalTiles(batches={k: shard(v) for k, v in tiles.items()},
-                     mask=shard(mask), n_real=n_real)
+                     mask=shard(mask), n_real=n_real,
+                     host_dispatch=host_dispatch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,8 +192,26 @@ def make_eval_engine(predict_fn: Callable, n_classes: int | None = None, *,
 
     counts = jax.jit(counts)
 
+    # host-dispatch path (stage() selects it at single-device + many
+    # tiles): one jitted per-tile dispatch each, counts accumulated ON
+    # DEVICE — the result is still a device array and the sums are
+    # bit-identical to the fused path's (confusion/count entries are
+    # small non-negative integers in float32, exact under any addition
+    # order). Trades the lax.map sequential loop's overhead for cheap
+    # per-dispatch overhead, which wins once tiles are many and small
+    # (the ROADMAP "0.70x at eval_batch=128" gap).
+    one_tile_jit = jax.jit(one_tile)
+    accum = jax.jit(lambda a, b: a + b)
+
     def run(params, tiles: EvalTiles):
-        return counts(params, tiles.batches, tiles.mask)
+        if not (tiles.host_dispatch and data_size == 1):
+            return counts(params, tiles.batches, tiles.mask)
+        acc = None
+        for t in range(tiles.n_tiles):
+            batch = {k: v[t] for k, v in tiles.batches.items()}
+            c = one_tile_jit(params, batch, tiles.mask[t])
+            acc = c if acc is None else accum(acc, c)
+        return acc
 
     return EvalEngine(run=run, n_classes=n_classes, mesh=mesh)
 

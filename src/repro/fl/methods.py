@@ -108,6 +108,21 @@ class FedMethod:
         return (self.cohort_tiling and not self.host_fusion
                 and not self.client_stateful)
 
+    @property
+    def async_eligible(self) -> bool:
+        """Whether the buffered-async driver of fl/async_engine.py may
+        run this method (DESIGN.md §12): a fusion event fuses ``buffer_k``
+        staleness-discounted client updates that trained from DIFFERENT
+        global versions, so fuse must be a pure weighted aggregation of
+        the stacked updates against the CURRENT global (affine in the
+        weighted client mean), clients must carry no per-client state
+        (an update is fully described by (client, base version)), and
+        fusion must complete on the device (host matching has no
+        staleness-weighted form). That is exactly the tier-fusion
+        eligibility; override only for a method whose fuse breaks the
+        buffered form in a way these flags don't capture."""
+        return self.tier_fusion
+
     def local_opt(self, cfg):
         """The optimizer driving the local phase. Default: the config's
         SGD(+momentum); methods whose analysis assumes a specific local

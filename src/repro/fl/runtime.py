@@ -88,6 +88,15 @@ class FLConfig:
     # (width, client count) pairs — "1.0x2,0.5x2,0.25x2" or a tuple of
     # pairs; None/() = homogeneous. Counts must sum to the population.
     tiers: Any = None
+    # buffered-async federation (fl/async_engine.py, DESIGN.md §12):
+    # mode="async" makes the fusion event the unit of progress — rounds
+    # counts events, cohort_size is the in-flight concurrency, buffer_k
+    # updates fuse per event (None -> cohort_size) under the staleness
+    # discount ("constant" | "polynomial(a)"). Only async-eligible
+    # methods qualify (FedMethod.async_eligible).
+    mode: str = "sync"
+    buffer_k: int | None = None
+    staleness: str = "constant"
 
     def __post_init__(self):
         if self.method not in methods_lib.available():
@@ -121,6 +130,37 @@ class FLConfig:
             capacity_lib.check_tier_support(methods_lib.get(self.method),
                                             mix)
             object.__setattr__(self, "tiers", mix)
+        if self.mode not in ("sync", "async"):
+            raise ValueError(
+                f"FLConfig.mode must be 'sync' or 'async', got "
+                f"{self.mode!r}")
+        if self.mode == "async":
+            from repro.fl import async_engine as async_lib
+            async_lib.parse_staleness(self.staleness)
+            async_lib.check_async_support(methods_lib.get(self.method))
+            if self.tiers is not None:
+                raise ValueError(
+                    "FLConfig.tiers and mode='async' are mutually "
+                    "exclusive: the buffered-async driver dispatches "
+                    "full-width cohort tiles (DESIGN.md §12); drop the "
+                    "tiers or run mode='sync'")
+            if self.buffer_k is None:
+                object.__setattr__(self, "buffer_k", self.cohort_size)
+            k = self.buffer_k
+            if not isinstance(k, int) or isinstance(k, bool) or k <= 0:
+                raise ValueError(
+                    f"FLConfig.buffer_k must be a positive int, got "
+                    f"{k!r}")
+        else:
+            if self.buffer_k is not None:
+                raise ValueError(
+                    "FLConfig.buffer_k is only meaningful with "
+                    "mode='async' (the per-fusion-event buffer bound); "
+                    "leave it None for sync rounds")
+            if self.staleness != "constant":
+                raise ValueError(
+                    "FLConfig.staleness is only meaningful with "
+                    "mode='async'; leave it 'constant' for sync rounds")
 
 
 @dataclasses.dataclass
@@ -281,9 +321,10 @@ def run_sampled_round(engine, pop: Population, method, server_state,
 
 
 def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
-                  test_batches, *, log=None, class_counts=None,
-                  group_spec=None, mesh=None, use_kernel=None,
-                  checkpoint_dir=None, checkpoint_every: int = 1,
+                  test_batches, *, latency: str = "zero", log=None,
+                  class_counts=None, group_spec=None, mesh=None,
+                  use_kernel=None, checkpoint_dir=None,
+                  checkpoint_every: int = 1,
                   resume: bool = False) -> dict:
     """parts: list of cfg.population per-client index arrays;
     get_batch(sel)->batch dict; test_batches: list of batch dicts for
@@ -318,6 +359,19 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     the homogeneous path unchanged (bit-identical;
     tests/test_capacity.py).
 
+    ``cfg.mode == "async"`` routes the whole run through the
+    buffered-async driver (fl/async_engine.py, DESIGN.md §12): one
+    history row per FUSION EVENT, ``latency`` names the
+    seed-deterministic client-latency trace ("zero" | "pareto(a)" |
+    "lognormal(sigma)"), and checkpointing is unsupported (the resumable
+    state would have to include the in-flight buffer). With
+    ``buffer_k == cohort_size``, ``latency="zero"`` and the constant
+    staleness weight the async run is BIT-IDENTICAL to this sync loop
+    for every async-eligible method (tests/test_async.py). A non-zero
+    ``latency`` under mode='sync' is rejected: the sync barrier has no
+    use for a trace (bench code simulates sync round times off the trace
+    directly via ``async_engine.sync_round_times``).
+
     checkpoint_dir: save the resumable run state (global params, server
     state, population client state, host rng) after every
     ``checkpoint_every``-th round; with ``resume=True`` an existing
@@ -333,6 +387,26 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
             f"FLConfig.population={cfg.population}; the partition defines "
             "the logical population — partition with "
             "n_clients=cfg.population or fix the config")
+    if cfg.mode == "async":
+        from repro.fl import async_engine as async_lib
+        if checkpoint_dir or resume:
+            raise ValueError(
+                "checkpointing is not supported with mode='async': the "
+                "resumable state would have to capture the in-flight "
+                "dispatch buffer (DESIGN.md §12); run mode='sync' or "
+                "drop checkpoint_dir/resume")
+        return async_lib.run_async_federated(
+            task, cfg, parts, get_batch, test_batches, latency=latency,
+            log=log, class_counts=class_counts, group_spec=group_spec,
+            mesh=mesh, use_kernel=use_kernel)
+    if latency != "zero":
+        from repro.fl import async_engine as async_lib
+        async_lib.parse_latency(latency)   # helpful error for typos
+        raise ValueError(
+            "a latency trace is only meaningful with mode='async': the "
+            "sync round barrier just waits out the slowest client — "
+            "simulate its round times with "
+            "async_engine.sync_round_times instead")
     if checkpoint_dir and (not isinstance(checkpoint_every, int)
                            or isinstance(checkpoint_every, bool)
                            or checkpoint_every < 1):

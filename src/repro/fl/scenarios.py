@@ -57,6 +57,12 @@ class ScenarioSpec:
     per-tier (width, client count) pairs summing to the population; ()
     = homogeneous capacity. Group-structured methods need width·G ∈ ℕ
     (a tier keeps whole feature groups).
+    mode/buffer_k/staleness/latency: buffered-async federation
+    (fl/async_engine.py, DESIGN.md §12) — mode="async" fuses every
+    ``buffer_k`` arrivals under the ``staleness`` discount, with client
+    training times drawn from the seed-deterministic ``latency`` trace
+    ("zero" | "pareto(a)" | "lognormal(sigma)") so a scenario can
+    express stragglers. Sync scenarios keep the defaults.
     """
     name: str
     summary: str
@@ -83,6 +89,10 @@ class ScenarioSpec:
     test_size: int = 400
     noise: float = 0.8
     eval_batch: int = 256
+    mode: str = "sync"
+    buffer_k: int | None = None
+    staleness: str = "constant"
+    latency: str = "zero"
 
     def __post_init__(self):
         if self.protocol not in PROTOCOLS:
@@ -106,6 +116,20 @@ class ScenarioSpec:
             mix = capacity_lib.parse_tiers(self.tiers)
             capacity_lib.validate_mix(mix, self.population)
             object.__setattr__(self, "tiers", mix)
+        if self.mode not in ("sync", "async"):
+            raise ValueError(
+                f"ScenarioSpec.mode must be 'sync' or 'async', got "
+                f"{self.mode!r}")
+        from repro.fl import async_engine as async_lib
+        async_lib.parse_latency(self.latency)
+        if self.mode == "async":
+            async_lib.parse_staleness(self.staleness)
+            async_lib.check_async_support(methods_lib.get(self.method))
+        elif self.latency != "zero":
+            raise ValueError(
+                "ScenarioSpec.latency is only meaningful with "
+                "mode='async' (the sync round barrier just waits out "
+                "the slowest client); keep it 'zero' for sync scenarios")
 
     def override(self, **kw) -> "ScenarioSpec":
         """A copy with fields replaced (smoke runs: fewer rounds, less
@@ -163,7 +187,8 @@ class ScenarioSpec:
                         batch_size=self.batch_size, lr=self.lr,
                         momentum=self.momentum, method=self.method,
                         seed=self.seed, eval_batch=self.eval_batch,
-                        tiers=self.tiers or None)
+                        tiers=self.tiers or None, mode=self.mode,
+                        buffer_k=self.buffer_k, staleness=self.staleness)
 
     def group_spec(self) -> GroupSpec:
         """The canonical class->group map the per-group accuracy rows
@@ -187,6 +212,10 @@ class ConvergenceRecord:
     tiers: list = dataclasses.field(default_factory=list)
     #                       # capacity mix [[width, count], ...]; [] =
     #                       # homogeneous
+    mode: str = "sync"      # "async": rows are fusion EVENTS and
+    sim_time: list = dataclasses.field(default_factory=list)
+    #                       # per-event simulated clock under the spec's
+    #                       # latency trace ([] for sync runs)
 
     @property
     def final_acc(self) -> float:
@@ -242,8 +271,8 @@ def run_scenario(spec: ScenarioSpec, *, mesh=None, use_kernel=None,
     test_batches = [{"images": test.images, "labels": test.labels}]
     task = cnn_task(spec.model_config())
     h = run_federated(task, spec.fl_config(), parts, get_batch,
-                      test_batches, log=log, mesh=mesh,
-                      use_kernel=use_kernel)
+                      test_batches, latency=spec.latency, log=log,
+                      mesh=mesh, use_kernel=use_kernel)
     gspec = spec.group_spec()
     rec = ConvergenceRecord(
         scenario=spec.name, method=spec.method,
@@ -259,7 +288,9 @@ def run_scenario(spec: ScenarioSpec, *, mesh=None, use_kernel=None,
                           for g in range(gspec.n_groups)],
         wall=[round(float(w), 3) for w in h["wall"]],
         wall_total=round(float(h["wall_total"]), 3),
-        tiers=[[w, c] for w, c in spec.tiers] if spec.tiers else [])
+        tiers=[[w, c] for w, c in spec.tiers] if spec.tiers else [],
+        mode=spec.mode,
+        sim_time=[round(float(t), 4) for t in h.get("sim_time", [])])
     if outdir is not None:
         rec.save(outdir)
     return rec
@@ -357,3 +388,20 @@ register(ScenarioSpec(
     name="dir05_fedavg_tiers", protocol="dirichlet", method="fedavg",
     lr=0.01, tiers=((1.0, 2), (0.5, 2), (0.25, 2)),
     summary="Dirichlet(0.5) skew + 1.0/0.5/0.25-width tiers, FedAvg"))
+
+# -- buffered-async federation (fl/async_engine.py, DESIGN.md §12) ----------
+# The straggler regime (ROADMAP item 1) on the N x C protocol:
+# 4 of 6 clients in flight, fuse every 2 arrivals under the polynomial
+# staleness discount, Pareto(1.5) heavy-tail client latencies — the
+# committed flbench_async.json shows time-to-accuracy beating the sync
+# barrier under this trace. Fusion events replace rounds in the record.
+register(ScenarioSpec(
+    name="nxc2_fedavg_async", protocol="nxc", method="fedavg",
+    mode="async", cohort_size=4, sampler="uniform", buffer_k=2,
+    staleness="polynomial(0.5)", latency="pareto(1.5)", rounds=15,
+    summary="N x C skew, buffered-async FedAvg under Pareto stragglers"))
+register(ScenarioSpec(
+    name="nxc2_fed2_async", protocol="nxc", method="fed2",
+    mode="async", cohort_size=4, sampler="uniform", buffer_k=2,
+    staleness="polynomial(0.5)", latency="pareto(1.5)", rounds=15,
+    summary="N x C skew, buffered-async Fed2 under Pareto stragglers"))

@@ -266,6 +266,75 @@ def run_tier_matrix(mesh, mesh_name: str, *, methods=("fedavg", "fed2"),
     return recs
 
 
+def run_async_one(method: str, family: str, mesh, mesh_name: str, *,
+                  clients: int, buffer_k: int, local_steps: int,
+                  batch: int, seq: int, outdir: str, use_kernel=None,
+                  verbose: bool = True) -> dict:
+    """Lower+compile ONE buffered-async FUSION EVENT (fl/async_engine.py,
+    DESIGN.md §12): the staleness-weighted fuse + server step over a
+    ``buffer_k``-wide stacked-update buffer. The event is the only NEW
+    compiled program of the async mode — its local tiles are the sync
+    engine's cohort program, already pinned by the fl_round records."""
+    from repro.fl.async_engine import lower_async_event
+
+    tag = f"fl_async_{method}_{family}_{mesh_name}"
+    rec = {"kind": "fl_async", "method": method, "family": family,
+           "mesh": mesh_name, "population": clients,
+           "cohort_size": clients, "buffer_k": buffer_k,
+           "local_steps": local_steps, "batch": batch}
+    try:
+        kind = "host" if mesh_name == "1x1" else "pod"
+        task, arch = (_cnn_case(method, kind) if family == "cnn"
+                      else _lm_case(method))
+        fl = FLConfig(population=clients, method=method, mode="async",
+                      buffer_k=buffer_k)
+        t0 = time.time()
+        lowered = lower_async_event(task, fl, mesh, use_kernel=use_kernel)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        rec.update(
+            status="ok", arch=arch,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops=_flops(compiled),
+            use_kernel=resolve_use_kernel(use_kernel, mesh),
+            memory={"temp_bytes": mem.temp_size_in_bytes,
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes},
+            collectives=collective_bytes(compiled.as_text()))
+        if verbose:
+            busy = {k: round(v["bytes"] / 2**20, 1)
+                    for k, v in rec["collectives"].items() if v["count"]}
+            print(f"[ok]   {tag}: lower {t_lower:.1f}s compile "
+                  f"{t_compile:.1f}s collectives(MiB) {busy}")
+    except Exception as e:  # noqa: BLE001 — record, keep the matrix going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    _write(outdir, tag, rec)
+    return rec
+
+
+def run_async_matrix(mesh, mesh_name: str, *, methods=("fedavg", "fed2"),
+                     families=FAMILIES, clients: int, local_steps: int,
+                     batch: int, seq: int, outdir: str, use_kernel=None,
+                     verbose: bool = True) -> list:
+    """Async fusion-event records for the async-eligible subset of
+    ``methods`` (ineligible ones have no event program to lower), at
+    buffer_k = cohort/2 — the sub-cohort buffering the mode exists for."""
+    eligible = [m for m in methods
+                if methods_lib.get(m).async_eligible]
+    buffer_k = max(1, clients // 2)
+    return [run_async_one(m, f, mesh, mesh_name, clients=clients,
+                          buffer_k=buffer_k, local_steps=local_steps,
+                          batch=batch, seq=seq, outdir=outdir,
+                          use_kernel=use_kernel, verbose=verbose)
+            for f in families for m in eligible]
+
+
 DEFAULT_OUT = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "..", "..",
     "benchmarks", "artifacts_perf"))      # cwd-independent, like flbench
@@ -276,6 +345,7 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                batch: int = 32, seq: int = 64, outdir: str = DEFAULT_OUT,
                cohort_size=None, sampler: str = "full",
                use_kernel=None, tiers: bool = True,
+               async_events: bool = True,
                verbose: bool = True) -> list:
     methods = methods_lib.available() if methods is None else methods
     bad = [m for m in methods if m not in methods_lib.available()] + \
@@ -302,6 +372,13 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                                 clients=clients, local_steps=local_steps,
                                 batch=batch, outdir=outdir,
                                 use_kernel=use_kernel, verbose=verbose)
+    if async_events:
+        async_methods = [m for m in ("fedavg", "fed2") if m in methods]
+        recs += run_async_matrix(mesh, mesh_name, methods=async_methods,
+                                 families=families, clients=clients,
+                                 local_steps=local_steps, batch=batch,
+                                 seq=seq, outdir=outdir,
+                                 use_kernel=use_kernel, verbose=verbose)
     return recs
 
 
@@ -336,6 +413,11 @@ def main():
                     help="also lower the capacity-tier tile matrix "
                          "(fedavg+fed2 x sub-model widths, cnn; "
                          "fl/capacity.py)")
+    ap.add_argument("--async-events",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="also lower the buffered-async fusion-event "
+                         "matrix (async-eligible fedavg+fed2 x families; "
+                         "fl/async_engine.py)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
 
@@ -348,7 +430,8 @@ def main():
                       local_steps=args.local_steps, batch=args.batch,
                       seq=args.seq, outdir=args.out,
                       cohort_size=args.cohort_size, sampler=args.sampler,
-                      use_kernel=args.use_kernel, tiers=args.tiers)
+                      use_kernel=args.use_kernel, tiers=args.tiers,
+                      async_events=args.async_events)
     n_fail = sum(r["status"] == "error" for r in recs)
     print(f"done; {len(recs)} records, {n_fail} failures")
     raise SystemExit(1 if n_fail else 0)

@@ -15,6 +15,10 @@ Examples:
       --cohort-size 16 --sampler uniform          # partial participation
   PYTHONPATH=src python -m repro.launch.train --mode fl --nodes 6 \
       --method fedavg --tiers 1.0x2,0.5x2,0.25x2  # capacity tiers
+  PYTHONPATH=src python -m repro.launch.train --mode fl --nodes 8 \
+      --cohort-size 4 --sampler uniform --fed-mode async --buffer-k 2 \
+      --staleness 'polynomial(0.5)' --latency 'pareto(1.5)'
+                                                  # buffered-async
 """
 from __future__ import annotations
 
@@ -126,9 +130,10 @@ def run_fl(args):
                   steps_per_epoch=args.steps_per_epoch,
                   batch_size=args.batch, lr=args.lr, momentum=0.9,
                   method=args.method, seed=args.seed,
-                  tiers=args.tiers or None)
+                  tiers=args.tiers or None, mode=args.fed_mode,
+                  buffer_k=args.buffer_k, staleness=args.staleness)
     h = run_federated(cnn_task(cfg), fl, parts, get_batch, test_batches,
-                      log=print)
+                      latency=args.latency, log=print)
     print("final acc:", h["acc"][-1])
     return h
 
@@ -165,6 +170,21 @@ def main():
                          "<width>x<count> pairs summing to --nodes, e.g. "
                          "1.0x2,0.5x2,0.25x2 (fl/capacity.py; "
                          "group-structured methods need width*G integer)")
+    ap.add_argument("--fed-mode", default="sync",
+                    choices=["sync", "async"],
+                    help="fl mode: 'async' = buffered-async federation "
+                         "(fl/async_engine.py) — --rounds counts fusion "
+                         "events, --cohort-size is the in-flight "
+                         "concurrency")
+    ap.add_argument("--buffer-k", type=int, default=None,
+                    help="async: updates fused per event (default = the "
+                         "cohort size, the sync-equivalent bound)")
+    ap.add_argument("--staleness", default="constant",
+                    help="async: staleness discount — 'constant' or "
+                         "'polynomial(a)'")
+    ap.add_argument("--latency", default="zero",
+                    help="async: seed-deterministic client-latency trace "
+                         "— 'zero', 'pareto(a)' or 'lognormal(sigma)'")
     ap.add_argument("--classes-per-node", type=int, default=5)
     ap.add_argument("--dirichlet", type=float, default=0.0)
     ap.add_argument("--local-epochs", type=int, default=1)
@@ -188,6 +208,12 @@ def main():
         ap.error("--scenario is only supported with --mode fl")
     if args.tiers and args.mode != "fl":
         ap.error("--tiers is only supported with --mode fl")
+    if args.mode != "fl" and (args.fed_mode != "sync"
+                              or args.buffer_k is not None
+                              or args.staleness != "constant"
+                              or args.latency != "zero"):
+        ap.error("--fed-mode/--buffer-k/--staleness/--latency are only "
+                 "supported with --mode fl")
     (run_lm if args.mode == "lm" else run_fl)(args)
 
 

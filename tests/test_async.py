@@ -1,0 +1,317 @@
+"""Buffered-async federation (fl/async_engine.py, DESIGN.md §12).
+
+The equivalence + property tier pinning the async mode:
+
+  - THE pin: ``mode="async"`` with an infinite buffer
+    (buffer_k == cohort_size), a zero-latency trace and the constant
+    staleness weight is BIT-IDENTICAL to ``mode="sync"`` for every
+    ``async_eligible`` method — same sampler stream, same batch rng,
+    same traced programs split at the fusion boundary.
+  - Hypothesis properties: effective weights normalize to 1 over every
+    fusion event; equal staleness cancels out of the normalized
+    weights (arrival order can't matter); the polynomial discount is
+    monotone non-increasing in staleness.
+  - Driver invariants on a real heavy-tail run: the buffer never
+    exceeds buffer_k; every accepted update fuses exactly once; the
+    whole run is seed-deterministic.
+  - Eligibility: scaffold / fedma / presence-weighted fed2 refuse with
+    explicit errors, at FLConfig validation AND at the driver.
+  - Latency traces are pure functions of (spec, seed, population) and
+    of the (client, seq) key — call order never matters.
+"""
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg9
+from repro.data.synthetic import make_image_dataset, nxc_partition
+from repro.fl import async_engine as async_lib
+from repro.fl import methods
+from repro.fl.runtime import FLConfig, cnn_task, run_federated
+
+_DS = make_image_dataset(240, n_classes=4, seed=0, noise=0.8)
+_TEST = make_image_dataset(80, n_classes=4, seed=9, noise=0.8)
+
+
+def _get_batch(sel):
+    return {"images": jnp.asarray(_DS.images[sel]),
+            "labels": jnp.asarray(_DS.labels[sel])}
+
+
+_TEST_BATCHES = [{"images": jnp.asarray(_TEST.images),
+                  "labels": jnp.asarray(_TEST.labels)}]
+_PARTS = nxc_partition(_DS.labels, 3, 2, 4, seed=1)
+
+
+def _fl(method, **kw):
+    return FLConfig(population=3, rounds=2, local_epochs=1,
+                    steps_per_epoch=2, batch_size=8, lr=0.02,
+                    momentum=0.9, method=method, seed=0, **kw)
+
+
+def _cfg(method):
+    if methods.get(method).uses_groups:
+        return vgg9.reduced(n_classes=4, fed2_groups=2, decouple=1,
+                            norm="gn")
+    return vgg9.reduced(n_classes=4, fed2_groups=0, norm="none")
+
+
+_ELIGIBLE = [m for m in methods.available()
+             if methods.get(m).async_eligible]
+
+
+def _leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# THE pin: infinite buffer + zero latency + constant staleness == sync
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", _ELIGIBLE)
+def test_async_infinite_buffer_bit_identical_to_sync(method):
+    """Every dispatch wave IS one sync cohort in the degenerate case, so
+    the two modes must agree BIT-for-bit — final params and every
+    per-event accuracy."""
+    task = cnn_task(_cfg(method))
+    sync = run_federated(task, _fl(method), _PARTS, _get_batch,
+                         _TEST_BATCHES)
+    fl = _fl(method, mode="async")        # buffer_k defaults to cohort
+    asyn = run_federated(task, fl, _PARTS, _get_batch, _TEST_BATCHES)
+    _leaves_equal(sync["final_params"], asyn["final_params"])
+    assert sync["acc"] == asyn["acc"]
+    assert all(s == [0] * fl.population for s in asyn["staleness"])
+    assert asyn["sim_time"] == [0.0] * fl.rounds
+
+
+def test_async_run_is_seed_deterministic():
+    """Two identical heavy-tail async runs produce bit-equal params and
+    identical histories (sampler, batch rng and trace are all derived
+    from cfg.seed)."""
+    task = cnn_task(_cfg("fedavg"))
+    fl = _fl("fedavg", mode="async", buffer_k=2,
+             staleness="polynomial(0.5)", cohort_size=3)
+    a = run_federated(task, fl, _PARTS, _get_batch, _TEST_BATCHES,
+                      latency="pareto(1.5)")
+    b = run_federated(task, fl, _PARTS, _get_batch, _TEST_BATCHES,
+                      latency="pareto(1.5)")
+    _leaves_equal(a["final_params"], b["final_params"])
+    assert a["acc"] == b["acc"]
+    assert a["sim_time"] == b["sim_time"]
+    assert a["staleness"] == b["staleness"]
+
+
+def test_async_history_contract():
+    """One history row per FUSION EVENT with the async columns filled
+    in, and nonzero staleness actually arises under a sub-cohort buffer
+    with heavy-tail latencies."""
+    task = cnn_task(_cfg("fedavg"))
+    fl = _fl("fedavg", mode="async", buffer_k=1, cohort_size=3,
+             staleness="polynomial(0.5)")
+    h = run_federated(task, fl, _PARTS, _get_batch, _TEST_BATCHES,
+                      latency="pareto(1.5)")
+    assert len(h["acc"]) == fl.rounds
+    assert len(h["staleness"]) == fl.rounds
+    assert all(len(s) == 1 for s in h["staleness"])
+    assert h["sim_time"] == sorted(h["sim_time"])     # event clock moves
+    assert len(h["confusion"]) == fl.rounds           # engine eval rides
+
+
+# ---------------------------------------------------------------------------
+# Fusion-event invariants (the hypothesis-driven effective-weight
+# properties live in tests/test_properties.py with the rest of the
+# property tier — that module skips wholesale when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+def test_effective_weights_normalize_and_equal_staleness_cancels():
+    """Normalized effective weights sum to 1; at EQUAL staleness the
+    discount is a common factor and cancels — the weight-level core of
+    arrival-order invariance (hypothesis generalizes both in
+    test_properties.py)."""
+    pol = async_lib.parse_staleness("polynomial(0.7)")
+    out = async_lib.effective_weights([3.0, 1.0, 2.0], [0, 4, 2], pol,
+                                      normalize=True)
+    assert abs(out.sum() - 1.0) < 1e-12
+    same = async_lib.effective_weights([3.0, 1.0, 2.0], [5, 5, 5], pol,
+                                       normalize=True)
+    np.testing.assert_allclose(same, [0.5, 1 / 6, 1 / 3], atol=1e-12)
+    with pytest.raises(ValueError, match="zero"):
+        async_lib.effective_weights([0.0, 0.0], [1, 2], pol,
+                                    normalize=True)
+    with pytest.raises(ValueError, match="align"):
+        async_lib.effective_weights([1.0], [1, 2], pol)
+
+
+def test_event_fn_permutation_invariance():
+    """Fusing one buffer in ANY arrival order (rows and weights
+    permuted together) yields the same new global — fuse renormalizes
+    over the event, so only the (update, weight) multiset matters."""
+    task = cnn_task(_cfg("fedavg"))
+    fl = _fl("fedavg", mode="async", buffer_k=3, cohort_size=3)
+    gp = task.init_fn(jax.random.PRNGKey(0))
+    eng = async_lib.make_async_engine(task, fl, gp)
+    rng = np.random.default_rng(0)
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.asarray(rng.normal(
+            size=(3,) + l.shape).astype(np.float32)), gp)
+    w = jnp.asarray([0.5, 0.2, 0.3], jnp.float32)
+    ref = None
+    for perm in itertools.permutations(range(3)):
+        p = np.asarray(perm)
+        _, ng = eng.event_fn(
+            eng.init_server_state(gp), gp,
+            jax.tree_util.tree_map(lambda l: l[p], stacked), w[p])
+        if ref is None:
+            ref = ng
+        else:
+            for x, y in zip(jax.tree_util.tree_leaves(ref),
+                            jax.tree_util.tree_leaves(ng)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Driver invariants on a real heavy-tail run
+# ---------------------------------------------------------------------------
+
+
+def _driver_run(buffer_k, latency="pareto(1.5)", rounds=4):
+    from repro.fl import population as population_lib
+    from repro.fl.population import Population
+    task = cnn_task(_cfg("fedavg"))
+    fl = _fl("fedavg", mode="async", buffer_k=buffer_k, cohort_size=3)
+    fl = dataclasses.replace(fl, rounds=rounds)
+    gp = task.init_fn(jax.random.PRNGKey(fl.seed))
+    eng = async_lib.make_async_engine(task, fl, gp)
+    pop = Population.from_parts(_PARTS)
+    sampler = population_lib.get(fl.sampler)
+    trace = async_lib.LatencyTrace.make(latency,
+                                        population=fl.population,
+                                        seed=fl.seed)
+    driver = async_lib.AsyncFederation(
+        eng, pop, sampler, fl, _get_batch, 2,
+        np.random.default_rng(fl.seed), trace,
+        async_lib.parse_staleness(fl.staleness))
+    driver.run(eng.init_server_state(gp), gp)
+    return driver
+
+
+@pytest.mark.parametrize("buffer_k", [1, 2, 3])
+def test_buffer_never_exceeds_bound_and_fuses_exactly_once(buffer_k):
+    d = _driver_run(buffer_k)
+    assert 0 < d.max_buffer_seen <= buffer_k
+    fused = [s for ev in d.fused_seqs for s in ev]
+    assert len(fused) == len(set(fused))          # exactly once
+    assert all(len(ev) == buffer_k for ev in d.fused_seqs)
+    assert len(d.fused_seqs) == 4                 # one per event
+    # accepted = fused + still in flight/buffer at shutdown
+    leftover = {x.seq for x in d.pending} | {x.seq for x in d.buffer}
+    assert set(fused) | leftover == set(range(d.seq))
+    assert not (set(fused) & leftover)
+
+
+def test_zero_latency_runs_one_tile_per_wave():
+    """The degenerate case's cost model: all same-version dispatches
+    compute as ONE padded cohort tile (sync-round compute)."""
+    d = _driver_run(3, latency="zero", rounds=3)
+    assert d.local_tiles == 3
+
+
+# ---------------------------------------------------------------------------
+# Eligibility + config validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method,hint", [
+    ("scaffold", "per-client state"),
+    ("fedma", "matched averaging"),
+])
+def test_ineligible_methods_refuse_at_config(method, hint):
+    with pytest.raises(ValueError, match="async"):
+        _fl(method, mode="async")
+    with pytest.raises(ValueError) as e:
+        async_lib.check_async_support(methods.get(method))
+    assert hint in str(e.value)
+
+
+def test_presence_weighted_fed2_refuses():
+    task = cnn_task(_cfg("fed2"))
+    fl = _fl("fed2", mode="async")
+    counts = np.ones((3, 4))
+    from repro.core.grouping import GroupSpec
+    with pytest.raises(ValueError, match="presence-weighted"):
+        async_lib.run_async_federated(
+            task, fl, _PARTS, _get_batch, _TEST_BATCHES,
+            class_counts=counts, group_spec=GroupSpec.contiguous(2, 4))
+
+
+def test_config_validation_rejects_bad_combinations():
+    with pytest.raises(ValueError, match="buffer_k"):
+        _fl("fedavg", buffer_k=2)                 # sync + buffer_k
+    with pytest.raises(ValueError, match="staleness"):
+        _fl("fedavg", staleness="polynomial(0.5)")
+    with pytest.raises(ValueError, match="staleness"):
+        _fl("fedavg", mode="async", staleness="polynomial(-1)")
+    with pytest.raises(ValueError, match="buffer_k"):
+        _fl("fedavg", mode="async", buffer_k=0)
+    with pytest.raises(ValueError, match="mode"):
+        _fl("fedavg", mode="turbo")
+    with pytest.raises(ValueError, match="tiers"):
+        _fl("fedavg", mode="async", tiers=((1.0, 3),))
+    task = cnn_task(_cfg("fedavg"))
+    with pytest.raises(ValueError, match="latency"):
+        run_federated(task, _fl("fedavg"), _PARTS, _get_batch,
+                      _TEST_BATCHES, latency="pareto(1.5)")
+
+
+def test_async_rejects_checkpointing(tmp_path):
+    task = cnn_task(_cfg("fedavg"))
+    with pytest.raises(ValueError, match="checkpoint"):
+        run_federated(task, _fl("fedavg", mode="async"), _PARTS,
+                      _get_batch, _TEST_BATCHES,
+                      checkpoint_dir=str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Latency traces
+# ---------------------------------------------------------------------------
+
+
+def test_latency_trace_seed_deterministic_and_order_free():
+    a = async_lib.LatencyTrace.make("pareto(1.5)", population=6, seed=3)
+    b = async_lib.LatencyTrace.make("pareto(1.5)", population=6, seed=3)
+    np.testing.assert_array_equal(a.rates, b.rates)
+    # (client, seq) keys the draw — call order and interleaving are free
+    want = [a.latency(c, s) for c in range(6) for s in range(4)]
+    got = [b.latency(c, s) for s in range(4) for c in range(6)]
+    assert sorted(want) == sorted(got)
+    assert a.latency(2, 7) == b.latency(2, 7)
+    c = async_lib.LatencyTrace.make("pareto(1.5)", population=6, seed=4)
+    assert not np.array_equal(a.rates, c.rates)
+    assert (a.rates >= 1.0).all()                 # pareto floor
+    z = async_lib.LatencyTrace.make("zero", population=6, seed=3)
+    assert z.latency(0, 0) == 0.0 and z.zero
+
+
+def test_parse_specs_reject_garbage():
+    for bad in ("pareto", "pareto(0)", "pareto(x)", "gaussian(1)", ""):
+        with pytest.raises(ValueError):
+            async_lib.parse_latency(bad)
+    for bad in ("polynomial", "polynomial(-2)", "poly(1)", 3):
+        with pytest.raises(ValueError):
+            async_lib.parse_staleness(bad)
+    assert async_lib.parse_staleness("constant").kind == "constant"
+    assert async_lib.parse_latency("lognormal(0.5)") == ("lognormal", 0.5)
+    p = async_lib.parse_staleness("polynomial(0.5)")
+    assert async_lib.parse_staleness(p) is p
+    assert p.spec == "polynomial(0.5)"

@@ -389,17 +389,24 @@ def test_hetero_run_fed2_grouped_with_presence():
     assert all(np.isfinite(a) for a in h["acc"])
 
 
-def test_hetero_run_full_sampler_small_cohort():
+@pytest.mark.parametrize("cohort_size", [1, 2])
+def test_hetero_run_full_sampler_small_cohort(cohort_size):
     """Full participation over a tiered population with a small
     cohort_size: tiles are sized by tier counts, so every participant
-    fits regardless of the cohort cap."""
+    fits regardless of the cohort cap — down to the cohort_size=1
+    extreme. Every round must see EVERY client exactly once (no id
+    dropped or doubled by tier splitting) and still produce a full,
+    finite history."""
     parts = nxc_partition(_DS.labels, 6, 5, 10, seed=0)
     h = run_federated(cnn_task(_PLAIN),
                       _fl("fedavg", tiers="1.0x2,0.5x2,0.25x2",
-                          cohort_size=2, sampler="full"),
+                          cohort_size=cohort_size, sampler="full"),
                       parts, _get_batch, _TEST_BATCHES)
     assert len(h["acc"]) == 2
-    assert all(len(p) == 6 for p in h["participants"])
+    for p in h["participants"]:
+        assert sorted(int(i) for i in p) == list(range(6))
+    assert all(np.isfinite(a) for a in h["acc"])
+    assert h["confusion"][-1].sum() == len(_TEST.labels)
 
 
 def test_hetero_run_with_uniform_sampler():

@@ -124,6 +124,17 @@ def test_resume_of_finished_run_reports_final_eval(tmp_path):
     for a, b in zip(jax.tree_util.tree_leaves(again["final_params"]),
                     jax.tree_util.tree_leaves(first["final_params"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the eval-only pass trains nothing: the checkpoint is untouched and
+    # the full history contract still holds (confusion rows included)
+    assert ckpt_io.checkpoint_step(ck) == 2
+    np.testing.assert_array_equal(again["confusion"][-1],
+                                  first["confusion"][-1])
+    assert len(again["acc"]) == len(again["wall"]) == 1
+    # resuming twice is idempotent — still one eval of the same model
+    third = run_federated(cnn_task(cfg), _fl("fedavg", 2), parts,
+                          _get_batch, _TEST_BATCHES, checkpoint_dir=ck,
+                          resume=True)
+    assert third["round"] == [1] and third["acc"] == again["acc"]
 
 
 def test_checkpoint_every_validated(tmp_path):

@@ -18,8 +18,8 @@ def test_design_md_exists_with_cited_sections():
     # the sections the codebase cites (§6 = method protocol; the former
     # §7 Data/§7.1 Synthetic renumbered to §8/§8.1 when §6 was inserted;
     # §9 = population & participation; §10 = scenarios & evaluation;
-    # §11 = heterogeneous capacity)
-    for must in ("3", "5", "6", "8.1", "9", "10", "11",
+    # §11 = heterogeneous capacity; §12 = buffered-async federation)
+    for must in ("3", "5", "6", "8.1", "9", "10", "11", "12",
                  "Shape-applicability"):
         assert must in sections, (must, sections)
 
@@ -99,6 +99,27 @@ def test_design_documents_heterogeneous_capacity():
         assert needle in s11, f"DESIGN.md §11 lost {needle!r}"
 
 
+def test_design_documents_buffered_async():
+    """DESIGN.md §12 must keep describing the buffer semantics, the
+    staleness discounts, the eligibility rule and the infinite-buffer
+    equivalence — the contracts tests/test_async.py pins in code."""
+    text = (ROOT / "DESIGN.md").read_text()
+    s12 = text.split("## §12")[1].split("\n## ")[0]
+    for needle in ("buffer_k", "staleness", "async_eligible",
+                   "BIT-IDENTICAL", "effective_weights", "pareto",
+                   "sync_round_times", "check_async_support"):
+        assert needle in s12, f"DESIGN.md §12 lost {needle!r}"
+
+
+def test_readme_documents_async_mode():
+    """The README must carry the buffered-async section: the mode/flag
+    table rows and the equivalence pin, matching the FLConfig knobs."""
+    readme = (ROOT / "README.md").read_text()
+    for needle in ("`--fed-mode async`", "`--buffer-k`", "`--staleness`",
+                   "`--latency`", "bench_async", "bit-identical"):
+        assert needle in readme, f"README async section lost {needle!r}"
+
+
 def test_readme_tier_table_covers_registered_widths():
     """The README tier table must carry a row for every width used by a
     registered tiered scenario, plus the uplink column header."""
@@ -119,7 +140,7 @@ def test_readme_tier_table_covers_registered_widths():
 
 def test_makefile_has_tier_and_drift_targets():
     mk = (ROOT / "Makefile").read_text()
-    for target in ("bench-tiers:", "check-drift:"):
+    for target in ("bench-tiers:", "bench-async:", "check-drift:"):
         assert target in mk, f"Makefile lost {target}"
     assert "check_drift.py" in mk
 
@@ -130,6 +151,15 @@ def test_ci_has_perf_drift_gate_and_concurrency():
     assert "check-drift" in ci
     assert "concurrency:" in ci and "cancel-in-progress: true" in ci
     assert "pytest-xdist" in ci and "-n auto" in ci
+
+
+def test_ci_runs_tier1_under_both_hash_seeds():
+    """The tier-1 job must keep its pinned-vs-unpinned PYTHONHASHSEED
+    matrix (order-dependence smoke) and the async benchmark step."""
+    ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
+    assert "PYTHONHASHSEED" in ci, "CI lost the hash-seed matrix"
+    assert '"random"' in ci and '"0"' in ci
+    assert "bench_async" in ci, "CI smoke lost the async benchmark"
 
 
 def test_readme_quotes_tier1_verify():

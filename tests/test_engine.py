@@ -183,3 +183,70 @@ def test_pack_client_batches_deterministic_under_fixed_seed():
     c = _pack_client_batches(parts, _idx_batch, n_steps=4, batch_size=6,
                              rng=np.random.default_rng(124))
     assert not np.array_equal(np.asarray(a["idx"]), np.asarray(c["idx"]))
+
+
+# ---------------------------------------------------------------------------
+# pad_tile_inputs — THE shared padding semantics of cohort tiling,
+# capacity tiers (fl/capacity.py) and async dispatch groups
+# (fl/async_engine.py)
+# ---------------------------------------------------------------------------
+
+
+def _pop(group_weights=None):
+    from repro.fl.population import Population
+    parts = [np.array([0, 1, 2, 3]), np.array([4, 5]),
+             np.array([6, 7, 8])]
+    return Population.from_parts(parts, group_weights=group_weights)
+
+
+def test_pad_tile_inputs_pads_first_id_at_zero_weight():
+    from repro.fl.runtime import pad_tile_inputs
+    pop = _pop()
+    ids, w, gw, batches = pad_tile_inputs(
+        pop, [2, 0], 4, _idx_batch, 2, 3, np.random.default_rng(0))
+    np.testing.assert_array_equal(ids, [2, 0, 2, 2])   # repeat first id
+    assert (w[:2] > 0).all() and (w[2:] == 0).all()    # pad rows: w = 0
+    assert gw is None
+    assert batches["idx"].shape == (4, 2, 3)           # full tile width
+    # pad-row batches draw from the repeated client's own shard
+    assert set(np.asarray(batches["idx"][2]).ravel()) <= {6, 7, 8}
+
+
+def test_pad_tile_inputs_zeroes_presence_rows():
+    from repro.fl.runtime import pad_tile_inputs
+    gw = np.arange(12, dtype=np.float64).reshape(3, 4) + 1.0
+    pop = _pop(group_weights=gw)
+    _, w, got, _ = pad_tile_inputs(
+        pop, [1], 3, _idx_batch, 1, 2, np.random.default_rng(0))
+    np.testing.assert_array_equal(got[0], gw[1])       # real presence row
+    np.testing.assert_array_equal(got[1:], 0.0)        # pad rows zeroed
+    # gw_cols=K: a tier keeps only its first K group columns
+    _, _, cut, _ = pad_tile_inputs(
+        pop, [1], 3, _idx_batch, 1, 2, np.random.default_rng(0),
+        gw_cols=2)
+    np.testing.assert_array_equal(cut, got[:, :2])
+    assert cut.shape == (3, 2)
+
+
+def test_pad_tile_inputs_uniform_weights():
+    from repro.fl.runtime import pad_tile_inputs
+    _, w, _, _ = pad_tile_inputs(
+        _pop(), [1, 2], 4, _idx_batch, 1, 2, np.random.default_rng(0),
+        uniform_weights=True)
+    np.testing.assert_array_equal(w, [1.0, 1.0, 0.0, 0.0])
+
+
+def test_pad_tile_inputs_matches_pack_client_batches():
+    """The padded tile's batches are exactly _pack_client_batches over
+    the padded id list under the same rng state — the agreement that
+    makes the sync fast path, cohort tiling, the tiered path and async
+    dispatch groups interchangeable at equal rng position."""
+    from repro.fl.runtime import pad_tile_inputs
+    pop = _pop()
+    ids, w, _, got = pad_tile_inputs(
+        pop, [2, 1], 3, _idx_batch, 2, 2, np.random.default_rng(7))
+    want = _pack_client_batches([pop.parts[i] for i in ids], _idx_batch,
+                                2, 2, np.random.default_rng(7))
+    np.testing.assert_array_equal(np.asarray(got["idx"]),
+                                  np.asarray(want["idx"]))
+    np.testing.assert_array_equal(w[:2], pop.weights[[2, 1]])

@@ -82,6 +82,41 @@ def test_result_stays_device_resident():
     assert isinstance(out, jax.Array)
 
 
+def test_stage_selects_host_dispatch_above_threshold():
+    """Path selection happens at staging time: a single-device staging
+    with more than HOST_DISPATCH_TILES tiles flips to the per-tile
+    host-dispatch path; few wide tiles keep the fused program; a mesh
+    with data-parallel tiles never selects it."""
+    few = evaluation_lib.stage(_BATCHES, tile=64)          # 4 tiles
+    assert not few.host_dispatch
+    many = evaluation_lib.stage(_BATCHES, tile=8)          # 32 tiles
+    assert many.n_tiles > evaluation_lib.HOST_DISPATCH_TILES
+    assert many.host_dispatch
+    meshed = evaluation_lib.stage(_BATCHES, tile=8,
+                                  mesh=make_host_mesh())
+    # the 1x1 host mesh still has data size 1 -> selection applies there
+    assert meshed.host_dispatch
+
+
+def test_host_dispatch_path_exact_and_device_resident():
+    """The small-tile fix (ROADMAP '0.70x at eval_batch=128'): the
+    host-dispatch path must return the EXACT reference confusion —
+    bit-identical to the fused path, since the counts are small
+    integers in f32 and exact under any summation order — and must
+    stay a device array (no host sync inside the round loop)."""
+    import dataclasses
+    engine = evaluation_lib.make_eval_engine(_TASK.predict_fn, 4)
+    tiles = evaluation_lib.stage(_BATCHES, tile=8)         # 32 tiles
+    assert tiles.host_dispatch
+    out = engine.run(_PARAMS, tiles)
+    assert isinstance(out, jax.Array)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  _reference_confusion())  # exact
+    fused = dataclasses.replace(tiles, host_dispatch=False)
+    np.testing.assert_array_equal(np.asarray(engine.run(_PARAMS, fused)),
+                                  np.asarray(out))
+
+
 def test_group_accuracy_rows():
     conf = np.array([[8, 2, 0, 0],
                      [1, 9, 0, 0],

@@ -43,12 +43,13 @@ def _rec(name):
 
 def _by_protocol(method: str) -> dict:
     """protocol -> scenario name for one method, from the registry.
-    Capacity-tiered scenarios are excluded: the paper's ordering claims
-    compare methods at HOMOGENEOUS capacity."""
+    Capacity-tiered and buffered-async scenarios are excluded: the
+    paper's ordering claims compare methods at HOMOGENEOUS capacity in
+    lockstep rounds."""
     out = {}
     for n in scenarios_lib.available():
         s = scenarios_lib.get(n)
-        if s.method == method and not s.tiers:
+        if s.method == method and not s.tiers and s.mode == "sync":
             out[s.protocol] = n
     return out
 

@@ -135,3 +135,62 @@ def test_group_spec_signatures_unique_and_cover():
         for s in sigs:
             covered |= s
         assert covered == set(range(c))
+
+
+# ---------------------------------------------------------------------------
+# Buffered-async effective weights (fl/async_engine.py, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+from repro.fl import async_engine as async_lib            # noqa: E402
+
+_weights = st.lists(st.floats(0.01, 100.0), min_size=1, max_size=8)
+
+
+@SET
+@given(_weights, st.floats(0.0, 3.0), st.data())
+def test_async_effective_weights_normalize_to_one(w, a, data):
+    """Every fusion event's normalized effective weights sum to 1 and
+    stay non-negative, for any (sample weight, staleness) buffer."""
+    s = data.draw(st.lists(st.integers(0, 20), min_size=len(w),
+                           max_size=len(w)))
+    pol = async_lib.parse_staleness(f"polynomial({a:g})")
+    out = async_lib.effective_weights(w, s, pol, normalize=True)
+    assert abs(out.sum() - 1.0) < 1e-9
+    assert (out >= 0).all()
+
+
+@SET
+@given(_weights, st.integers(0, 20), st.floats(0.0, 3.0))
+def test_async_equal_staleness_cancels_from_normalized_weights(w, s, a):
+    """At EQUAL staleness the discount is a common factor of the event,
+    so the normalized effective weights equal the normalized sample
+    weights — arrival order inside a wave cannot change fusion."""
+    pol = async_lib.parse_staleness(f"polynomial({a:g})")
+    out = async_lib.effective_weights(w, [s] * len(w), pol,
+                                      normalize=True)
+    want = np.asarray(w, np.float64) / np.sum(w)
+    np.testing.assert_allclose(out, want, atol=1e-9)
+
+
+@SET
+@given(_weights, st.data(), st.floats(0.01, 4.0))
+def test_async_weights_permutation_equivariant(w, data, a):
+    """Permuting a buffer permutes its effective weights identically —
+    the multiset of (weight, staleness) pairs is all that matters."""
+    s = data.draw(st.lists(st.integers(0, 20), min_size=len(w),
+                           max_size=len(w)))
+    perm = data.draw(st.permutations(range(len(w))))
+    pol = async_lib.StalenessPolicy("polynomial", a)
+    out = async_lib.effective_weights(w, s, pol)
+    per = async_lib.effective_weights([w[i] for i in perm],
+                                      [s[i] for i in perm], pol)
+    np.testing.assert_allclose(per, out[np.asarray(perm)], atol=1e-12)
+
+
+@SET
+@given(st.floats(0.01, 4.0), st.integers(0, 30))
+def test_async_polynomial_discount_monotone_nonincreasing(a, s):
+    pol = async_lib.StalenessPolicy("polynomial", a)
+    assert pol.discount(s) >= pol.discount(s + 1)
+    assert 0.0 < pol.discount(s) <= 1.0
+    assert async_lib.StalenessPolicy("constant").discount(s) == 1.0
