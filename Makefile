@@ -4,7 +4,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-claims smoke smoke-scenario scenarios bench-infra \
-	bench-cohort bench-eval bench-tiers bench-async dryrun-fl check-drift
+	bench-cohort bench-population bench-eval bench-tiers bench-async \
+	dryrun-fl check-drift
 
 # the tier-1 gate (ROADMAP.md)
 test:
@@ -48,9 +49,16 @@ check-drift:
 	    --local-steps 2 --batch 8 --seq 32 --out $(DRIFT_FRESH)
 	$(PY) benchmarks/check_drift.py --fresh $(DRIFT_FRESH)
 
-# host-loop rounds/sec vs population at fixed cohort (DESIGN.md §9)
+# host-loop rounds/sec + resident memory vs population at fixed cohort,
+# out-of-core client-state store, 10^4..10^6 clients (DESIGN.md §9, §13)
 bench-cohort:
 	$(PY) benchmarks/flbench.py bench_cohort
+
+# the full population ladder explicitly (alias for the committed
+# flbench_cohort.json run; REPRO_BENCH_POPULATIONS overrides the rungs)
+bench-population:
+	REPRO_BENCH_POPULATIONS=10000,100000,1000000 \
+	    $(PY) benchmarks/flbench.py bench_cohort
 
 # sharded tiled eval engine vs seed host loop (DESIGN.md §10)
 bench-eval:

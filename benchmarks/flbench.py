@@ -250,16 +250,44 @@ def bench_methods(*, nodes=4, rounds=None, steps_per_epoch=4,
     return recs
 
 
-def bench_cohort(*, populations=(16, 64, 256), cohort=8, rounds=None,
+def _rss_mb() -> float:
+    """Current resident set (VmRSS, MB) from /proc — the O(cohort)
+    server-memory evidence column of bench_cohort."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return round(int(line.split()[1]) / 1024, 1)
+    except OSError:
+        pass
+    return float("nan")
+
+
+def bench_cohort(*, populations=None, cohort=8, rounds=None,
                  steps_per_epoch=4, batch=16, method="fedavg",
-                 sampler="uniform") -> list:
-    """Rounds/sec of the SAMPLED host loop vs population size at a fixed
-    cohort (engine width): the engine compiles once per cohort width, so
-    growing the logical population must cost only the host-side
-    gather/pack/scatter — the scaling direction the population API exists
-    for (DESIGN.md §9)."""
+                 sampler="weighted", store="mmap",
+                 chunk_size=4096) -> list:
+    """Rounds/sec AND resident memory of the sampled host loop vs
+    population size at a fixed cohort (engine width), at out-of-core
+    scale: 10^4 / 10^5 / 10^6 logical clients (DESIGN.md §9, §13).
+
+    The engine compiles once per cohort width; the client-state store
+    (fl/statestore.py) keeps per-client rows and the population's aux
+    arrays (shard indices, weights) on disk; the weighted sampler draws
+    from a Walker alias table (O(P) build once, O(cohort log P) per
+    round). So growing the population 100x must leave steady-state
+    rounds/sec flat (±10%) and peak RSS O(cohort), not O(P) — the two
+    claims the committed flbench_cohort.json pins. O(P) setup (striped
+    partition, alias build, aux offload) happens before the timer.
+
+    ``REPRO_BENCH_POPULATIONS`` (comma-separated) overrides the
+    population ladder — CI smoke runs the 10^4 rung only."""
     import jax
 
+    if populations is None:
+        env = os.environ.get("REPRO_BENCH_POPULATIONS", "")
+        populations = (tuple(int(x) for x in env.split(",") if x)
+                       if env else (10_000, 100_000, 1_000_000))
     rounds = rounds or (4 if QUICK else 10)
     ds, _ = dataset()
 
@@ -269,8 +297,10 @@ def bench_cohort(*, populations=(16, 64, 256), cohort=8, rounds=None,
 
     from repro.fl.population import Population
     from repro.fl import population as population_lib
+    from repro.fl import statestore as statestore_lib
     from repro.fl.engine import make_round_engine
     from repro.fl.runtime import run_sampled_round
+    from repro.fl.statestore import ShardIndices
 
     recs = []
     cfg = model_cfg("vgg9", method)
@@ -289,15 +319,20 @@ def bench_cohort(*, populations=(16, 64, 256), cohort=8, rounds=None,
                        lr=0.008, momentum=0.9, method=method, seed=0),
         gp0)
     for population in populations:
-        parts = nxc_partition(ds.labels, population, 5, N_CLASSES, seed=0)
+        # striped synthetic partition: two vectorized ops, no P-element
+        # python list (nxc_partition's per-client loop IS an O(P) server
+        # cost this bench exists to avoid)
+        parts = ShardIndices.striped(len(ds.labels), population)
         fl = FLConfig(population=population, cohort_size=cohort,
                       sampler=sampler, rounds=rounds, local_epochs=1,
                       steps_per_epoch=steps_per_epoch, batch_size=batch,
-                      lr=0.008, momentum=0.9, method=method, seed=0)
+                      lr=0.008, momentum=0.9, method=method, seed=0,
+                      store=store, chunk_size=chunk_size)
         pop = Population.from_parts(parts)
+        pop.use_store(statestore_lib.get(store, chunk_size=chunk_size))
         gp = gp0
         server = engine.init_server_state(gp)
-        pop.clients = engine.init_population_state(gp, pop.size)
+        pop.store.initialize(engine.init_client_row(gp), pop.size)
         rng = np.random.default_rng(0)
 
         uniform_w = smp.fusion_weights == "uniform"
@@ -309,18 +344,25 @@ def bench_cohort(*, populations=(16, 64, 256), cohort=8, rounds=None,
                                      get_batch, steps_per_epoch, fl, rng,
                                      uniform_weights=uniform_w)
 
-        server, gp = one_round(0, server, gp)              # compile
-        jax.block_until_ready(gp)
+        server, gp = one_round(0, server, gp)              # compile +
+        jax.block_until_ready(gp)                          # alias build
         t0 = time.time()
         for r in range(1, rounds + 1):
             server, gp = one_round(r, server, gp)
         jax.block_until_ready(gp)
         dt = time.time() - t0
+        import resource
         recs.append({"population": population, "cohort_size": cohort,
                      "sampler": sampler, "method": method,
+                     "store": store, "chunk_size": chunk_size,
                      "rounds": rounds,
                      "rounds_per_s": round(rounds / dt, 3),
-                     "us_per_round": round(1e6 * dt / rounds)})
+                     "us_per_round": round(1e6 * dt / rounds),
+                     "rss_mb": _rss_mb(),
+                     "peak_rss_mb": round(
+                         resource.getrusage(
+                             resource.RUSAGE_SELF).ru_maxrss / 1024, 1)})
+        pop.store.close()
     os.makedirs(ARTIFACTS_PERF, exist_ok=True)
     with open(os.path.join(ARTIFACTS_PERF, "flbench_cohort.json"),
               "w") as f:
@@ -575,7 +617,8 @@ def main(argv=None):
         for r in bench_cohort():
             print(f"fl_cohort_pop{r['population']},{r['us_per_round']},"
                   f"rounds_per_s={r['rounds_per_s']},"
-                  f"cohort={r['cohort_size']}")
+                  f"cohort={r['cohort_size']},store={r['store']},"
+                  f"rss_mb={r['rss_mb']},peak_rss_mb={r['peak_rss_mb']}")
     if "bench_eval" in chosen:
         for r in bench_eval():
             print(f"fl_eval_b{r['eval_batch']},"

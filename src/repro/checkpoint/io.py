@@ -18,6 +18,16 @@ def _flatten(params):
     return out, treedef
 
 
+def write_array_atomic(path: str, arr: np.ndarray) -> None:
+    """Write one ``.npy`` file atomically (tmp + ``os.replace``) — the
+    same publish discipline as ``save_checkpoint``'s params archive,
+    shared with the out-of-core client-state shards
+    (fl/statestore.py): a reader never sees a half-written array."""
+    tmp = path + ".tmp.npy"            # .npy suffix: np.save appends one
+    np.save(tmp, np.asarray(arr))
+    os.replace(tmp, path)
+
+
 def _params_file(path: str) -> str:
     """The params archive the manifest names (older checkpoints predate
     the field and always used params.npz)."""
@@ -98,27 +108,65 @@ def save_fl_checkpoint(path: str, *, round_idx: int, global_params,
                        server_state, client_state, rng) -> None:
     """One federated run's full resumable state after ``round_idx``
     completed rounds: global params, the method's server tree, the
-    population's stacked client state, and the host rng state (batch
-    packing and client sampling draw from it — restoring it is what
-    makes a resumed run bit-identical to the uninterrupted one)."""
+    population's client state, and the host rng state (batch packing
+    and client sampling draw from it — restoring it is what makes a
+    resumed run bit-identical to the uninterrupted one).
+
+    ``client_state`` is either a stacked tree / in-memory store (saved
+    whole inside the params archive, the historical format) or an
+    INCREMENTAL ``ClientStateStore`` (fl/statestore.py,
+    ``store.incremental``): then only the shards dirtied since the last
+    save are flushed into ``<path>/clients/`` as step-versioned files,
+    and the manifest records the full shard->file map (clean shards
+    keep the file the previous manifest published). Write order keeps
+    the crash guarantee: fresh shard files first, manifest replace as
+    the single publish point, superseded shard files pruned last."""
+    extra = {"rng_state": rng.bit_generator.state}
+    if getattr(client_state, "incremental", False):
+        store = client_state
+        clients_dir = os.path.join(path, "clients")
+        files = store.checkpoint_shards(clients_dir, round_idx)
+        extra["client_store"] = {"layout": store.layout(), "files": files}
+        save_checkpoint(path, {"global": global_params,
+                               "server": server_state},
+                        step=round_idx, extra=extra)
+        store.prune_checkpoint_files(clients_dir)
+        return
+    tree = getattr(client_state, "tree", client_state)
     save_checkpoint(path, {"global": global_params, "server": server_state,
-                           "clients": client_state},
-                    step=round_idx,
-                    extra={"rng_state": rng.bit_generator.state})
+                           "clients": tree},
+                    step=round_idx, extra=extra)
 
 
 def load_fl_checkpoint(path: str, *, like_global, like_server,
-                       like_clients):
+                       like_clients=None, store=None):
     """Restore a run saved by ``save_fl_checkpoint``.
 
     Returns (round_idx, global_params, server_state, client_state,
-    rng_state); client_state comes back as WRITABLE host numpy arrays
-    (the population stack is mutated in place by scatter)."""
+    rng_state). For the historical whole-stack format client_state
+    comes back as WRITABLE host numpy arrays (restored into the
+    ``like_clients`` structure; the population stack is mutated in
+    place by scatter). For an incremental checkpoint the shards are
+    restored INTO ``store`` (which must match the saved layout) and
+    client_state is returned as None — the store already holds the
+    rows."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if "client_store" in manifest.get("extra", {}):
+        if store is None or not getattr(store, "incremental", False):
+            raise ValueError(
+                f"checkpoint at {path} holds an incremental client-state "
+                "store; pass the run's MmapShardStore (store=) to "
+                "restore it — an in-memory run cannot resume it")
+        tree = load_checkpoint(path, {"global": like_global,
+                                      "server": like_server})
+        store.restore_shards(os.path.join(path, "clients"),
+                             manifest["extra"]["client_store"])
+        return (manifest["step"], tree["global"], tree["server"], None,
+                manifest["extra"]["rng_state"])
     tree = load_checkpoint(path, {"global": like_global,
                                   "server": like_server,
                                   "clients": like_clients})
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
     clients = jax.tree_util.tree_map(np.array, tree["clients"])
     return (manifest["step"], tree["global"], tree["server"], clients,
             manifest["extra"]["rng_state"])

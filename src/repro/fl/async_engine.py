@@ -587,6 +587,14 @@ def run_async_federated(task, cfg, parts, get_batch, test_batches, *,
     rng = np.random.default_rng(cfg.seed)
     global_params = task.init_fn(jax.random.PRNGKey(cfg.seed))
     pop = Population.from_parts(parts)
+    # async-eligible methods are stateless-client (check_async_support),
+    # so the store only ever holds the aux arrays here: with
+    # store="mmap" the parts/weights offload to disk and every
+    # per-arrival dispatch stays O(1) shards — pad_tile_inputs fancy-
+    # indexes just the in-flight client's rows off the maps.
+    from repro.fl import statestore as statestore_lib
+    pop.use_store(statestore_lib.get(cfg.store,
+                                     chunk_size=cfg.chunk_size))
     engine = make_async_engine(task, cfg, global_params, mesh=mesh,
                                use_kernel=use_kernel, method=method)
     server_state = engine.init_server_state(global_params)
@@ -635,6 +643,7 @@ def run_async_federated(task, cfg, parts, get_batch, test_batches, *,
     history["acc"] = [_count_acc(c) for c in counts]
     history["wall_total"] = time.time() - t0
     history["final_params"] = global_params
+    pop.store.close()
     return history
 
 

@@ -153,19 +153,27 @@ class RoundEngine:
     def _w32(w):
         return None if w is None else jnp.asarray(w, jnp.float32)
 
+    def init_client_row(self, global_params: PyTree) -> PyTree:
+        """ONE client's round-0 state tree as HOST (numpy) arrays — the
+        row a ``ClientStateStore`` (fl/statestore.py) broadcasts or
+        persists at population width. Only this single row ever touches
+        the device: population-wide storage is the store's business."""
+        return jax.tree_util.tree_map(
+            lambda l: np.asarray(l[0]),
+            self.init_client_states(global_params, 1))
+
     def init_population_state(self, global_params: PyTree,
                               population: int) -> PyTree:
         """Stacked (population, ...) client state as HOST (numpy) arrays:
         the persistent population state lives outside the jitted round,
         so scatter_client_state can write cohort rows in place instead of
-        copying the whole population tree on device every round. Only ONE
-        client's state ever touches the device here — the population
-        stack is broadcast host-side (np.array makes it writable; device
-        buffers are read-only), so a million-client population is bounded
-        by host RAM, never accelerator memory."""
-        one = jax.tree_util.tree_map(
-            lambda l: np.asarray(l[0]),
-            self.init_client_states(global_params, 1))
+        copying the whole population tree on device every round. This is
+        exactly ``InMemoryStore.initialize``'s broadcast (np.array makes
+        it writable; device buffers are read-only) — kept as the direct
+        stacked-tree entry point for benches and tests; out-of-core runs
+        call ``store.initialize(engine.init_client_row(gp), P)``
+        instead, which never materializes the (P, ...) stack."""
+        one = self.init_client_row(global_params)
         return jax.tree_util.tree_map(
             lambda l: np.array(
                 np.broadcast_to(l[None], (population,) + l.shape)), one)

@@ -149,28 +149,26 @@ class FedMethod:
 
     # -- population <-> cohort state movement (fl/population.py) ------------
 
-    def gather_client_state(self, stacked: PyTree, ids) -> PyTree:
-        """Rows ``ids`` of the HOST (population, ...) state ->
-        (cohort, ...) slots (an O(cohort) copy; the jit boundary moves it
-        on-device). Override when state is not plainly row-indexable."""
-        return jax.tree_util.tree_map(lambda a: a[ids], stacked)
+    def gather_client_state(self, store, ids) -> PyTree:
+        """Rows ``ids`` of the population state -> (cohort, ...) slots,
+        streamed through the population's ``ClientStateStore``
+        (fl/statestore.py, DESIGN.md §13): an O(cohort) copy regardless
+        of P — in-memory stores fancy-index the host stack, the mmap
+        store materializes only the touched shards' rows; the jit
+        boundary moves the result on-device. Override when state is not
+        plainly row-indexable."""
+        return store.gather(np.asarray(ids))
 
-    def scatter_client_state(self, stacked: PyTree, ids,
-                             new_states: PyTree) -> PyTree:
-        """Write cohort slots back into rows ``ids`` of the
-        (population, ...) state; untouched rows keep their values (a
-        client that sits a round out keeps its state bit-for-bit). The
-        population state lives host-side as numpy
-        (``RoundEngine.init_population_state``) so this is an IN-PLACE
-        O(cohort) row write — never an O(population) device copy."""
-        def put(a, new):
-            a = np.asarray(a)
-            if not a.flags.writeable:     # handed a device tree: copy once
-                a = np.array(a)
-            a[ids] = np.asarray(new)
-            return a
-
-        return jax.tree_util.tree_map(put, stacked, new_states)
+    def scatter_client_state(self, store, ids,
+                             new_states: PyTree) -> None:
+        """Write cohort slots back into rows ``ids`` of the population
+        state; untouched rows keep their values (a client that sits a
+        round out keeps its state bit-for-bit). An O(cohort) dirty-row
+        write regardless of P: the in-memory store mutates its host
+        stack in place, the mmap store writes through the touched
+        shards' maps and marks them dirty for the next incremental
+        checkpoint — never an O(population) copy."""
+        store.scatter(np.asarray(ids), new_states)
 
     # -- local phase --------------------------------------------------------
 

@@ -7,9 +7,12 @@ This module decouples the two widths:
 
 - ``Population``: the P *logical* clients — per-client shard indices,
   sample-count weights, optional (P, G) presence weights, and the
-  persistent per-client method state as stacked ``(P, ...)`` arrays that
-  live host-side, OUTSIDE the jitted round (scaffold control variates
-  belong to clients, not to cohort slots).
+  persistent per-client method state held by a ``ClientStateStore``
+  (fl/statestore.py, DESIGN.md §13) that lives host-side, OUTSIDE the
+  jitted round (scaffold control variates belong to clients, not to
+  cohort slots). The default ``InMemoryStore`` is the historical
+  stacked ``(P, ...)`` array behavior bit-for-bit; ``MmapShardStore``
+  keeps the population on disk and the server at O(cohort) RAM.
 - ``ClientSampler``: the participation strategy — which client ids train
   in round r. Strategies are registered by name exactly like federated
   methods (fl/methods.py): ``register`` / ``get`` / ``available()``;
@@ -38,45 +41,77 @@ PyTree = Any
 class Population:
     """The P logical clients behind a federated run.
 
-    parts: per-client sample index arrays (the data shards).
+    parts: per-client sample index arrays (the data shards) — a list of
+    P arrays or a ``statestore.ShardIndices`` (flat + offsets, the
+    O(P)-ints form out-of-core stores mmap).
     weights: (P,) float64 sample counts, floored at 1 (the fusion weights
-    before per-cohort renormalization).
+    before per-cohort renormalization). May be a read-only memory map
+    after ``use_store`` offloads it.
     group_weights: optional (P, G) presence weights for fed2's non-IID
     refinement (rows are gathered per cohort; paired_average renormalizes
     columns over the participants it sees).
-    clients: stacked (P, ...) per-client method state trees as HOST
-    (numpy) arrays (``RoundEngine.init_population_state``) — persistent
-    across rounds, mutated only through ``scatter`` (in-place cohort-row
-    writes, O(cohort) per round regardless of P).
+    store: the ``ClientStateStore`` (fl/statestore.py, DESIGN.md §13)
+    holding the persistent per-client method state — ``InMemoryStore``
+    by default (stacked host arrays, the historical behavior
+    bit-for-bit), ``MmapShardStore`` for out-of-core populations.
+    ``clients`` remains the stacked-tree view of it for in-memory runs.
     tiers: optional (P,) int tier index per client — the capacity class
     each logical client trains (fl/capacity.py ``TierPlan.assignment``);
     None for homogeneous runs.
     """
-    parts: list
+    parts: Any
     weights: np.ndarray
     group_weights: np.ndarray | None = None
-    clients: PyTree = ()
+    store: Any = None
     tiers: np.ndarray | None = None
+
+    def __post_init__(self):
+        if self.store is None:
+            from repro.fl import statestore
+            self.store = statestore.InMemoryStore()
 
     @classmethod
     def from_parts(cls, parts, group_weights=None) -> "Population":
-        weights = np.maximum([len(p) for p in parts], 1).astype(np.float64)
+        from repro.fl import statestore
+        if isinstance(parts, statestore.ShardIndices):
+            weights = np.maximum(parts.lengths(), 1).astype(np.float64)
+        else:
+            parts = list(parts)
+            weights = np.maximum([len(p) for p in parts],
+                                 1).astype(np.float64)
         gw = None if group_weights is None else np.asarray(group_weights,
                                                            np.float64)
-        return cls(parts=list(parts), weights=weights, group_weights=gw)
+        return cls(parts=parts, weights=weights, group_weights=gw)
 
     @property
     def size(self) -> int:
         return len(self.parts)
 
+    @property
+    def clients(self) -> PyTree:
+        """The full stacked (P, ...) state tree — the historical view,
+        served by the store (out-of-core stores refuse: gather rows)."""
+        return self.store.tree
+
+    @clients.setter
+    def clients(self, stacked: PyTree) -> None:
+        self.store.adopt(stacked)
+
+    def use_store(self, store) -> None:
+        """Swap in a ClientStateStore and let it take over whatever
+        population-wide storage it owns (out-of-core stores also offload
+        parts/weights/presence rows to disk)."""
+        self.store = store
+        store.offload_aux(self)
+
     def gather(self, method, ids) -> PyTree:
         """Sampled clients' state rows -> cohort-slot stacked trees."""
-        return method.gather_client_state(self.clients, np.asarray(ids))
+        return method.gather_client_state(self.store, np.asarray(ids))
 
     def scatter(self, method, ids, new_states) -> None:
         """Write cohort slots back to the sampled clients' rows."""
-        self.clients = method.scatter_client_state(
-            self.clients, np.asarray(ids), new_states)
+        method.scatter_client_state(self.store, np.asarray(ids),
+                                    new_states)
 
 
 # ---------------------------------------------------------------------------
@@ -165,19 +200,37 @@ class WeightedSampler(ClientSampler):
     replacement — large-shard clients participate more often, and each
     participant then contributes EQUALLY to fusion
     (``fusion_weights = "uniform"``; weighting both the draw and the
-    average would double-count large shards)."""
+    average would double-count large shards).
+
+    Backed by a Walker alias table (fl/statestore.py ``AliasTable``):
+    O(P) build ONCE per weights array — cached on the sampler instance
+    and rebuilt only when a different weights array arrives — then
+    O(cohort log P) per round (O(1) alias draws + rejection for the
+    without-replacement cohort) instead of ``rng.choice``'s O(P) scan
+    every round. Zero-weight clients are NEVER sampled, and an all-zero
+    weight vector raises instead of dividing by the zero total. Returns
+    sorted unique ids."""
     name = "weighted"
     summary = "probability proportional to shard size, w/o replacement"
     fusion_weights = "uniform"
 
-    def sample(self, round_idx, population, cohort_size, rng, weights=None):
+    def __init__(self):
+        self._src = None          # the weights array the table was built on
+        self._table = None
+
+    def _alias_table(self, population, weights):
+        from repro.fl.statestore import AliasTable
         if weights is None:
-            p = None
-        else:
-            w = np.asarray(weights, np.float64)
-            p = w / w.sum()
-        return np.sort(rng.choice(population, size=cohort_size,
-                                  replace=False, p=p)).astype(np.int64)
+            weights = np.ones(population, np.float64)
+        if self._table is None or self._src is not weights \
+                or self._table.n != population:
+            self._table = AliasTable(weights)
+            self._src = weights
+        return self._table
+
+    def sample(self, round_idx, population, cohort_size, rng, weights=None):
+        table = self._alias_table(population, weights)
+        return table.sample_without_replacement(rng, cohort_size)
 
 
 @register
@@ -186,7 +239,9 @@ class RoundRobinSampler(ClientSampler):
     [r*C, r*C + C) mod population. When C divides the population every
     client participates exactly once per population/C rounds; otherwise
     the window wraps mid-cycle and coverage stays cyclic but uneven over
-    short horizons."""
+    short horizons. Pure function of (round_idx, population,
+    cohort_size): it never draws from ``rng``, so the same round always
+    yields the same (unique, window-ordered) ids."""
     name = "round_robin"
     summary = "deterministic cycling window over client ids"
 

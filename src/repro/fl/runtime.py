@@ -84,6 +84,12 @@ class FLConfig:
     server_momentum: float = 0.9
     seed: int = 0
     eval_batch: int = 512
+    # client-state storage (fl/statestore.py, DESIGN.md §13): "memory"
+    # keeps the historical stacked (P, ...) host arrays (O(P) RAM);
+    # "mmap" keeps the population on disk as chunk_size-row mmap shards
+    # (O(cohort) RAM, incremental checkpoints).
+    store: str = "memory"
+    chunk_size: int = 1024
     # heterogeneous capacity (fl/capacity.py, DESIGN.md §11): per-tier
     # (width, client count) pairs — "1.0x2,0.5x2,0.25x2" or a tuple of
     # pairs; None/() = homogeneous. Counts must sum to the population.
@@ -107,6 +113,17 @@ class FLConfig:
             raise ValueError(
                 f"unknown client sampler {self.sampler!r}; available: "
                 f"{', '.join(population_lib.available())}")
+        from repro.fl import statestore as statestore_lib
+        if self.store not in statestore_lib.available():
+            raise ValueError(
+                f"unknown client-state store {self.store!r}; available: "
+                f"{', '.join(statestore_lib.available())}")
+        if (not isinstance(self.chunk_size, int)
+                or isinstance(self.chunk_size, bool)
+                or self.chunk_size <= 0):
+            raise ValueError(
+                f"FLConfig.chunk_size must be a positive int (rows per "
+                f"client-state shard), got {self.chunk_size!r}")
         if self.cohort_size is None:
             object.__setattr__(self, "cohort_size", self.population)
         for field in ("rounds", "population", "cohort_size", "batch_size",
@@ -248,8 +265,11 @@ def run_sampled_round(engine, pop: Population, method, server_state,
         # whole population in one cohort in natural order: client state
         # needs no slot remapping, so keep it device-resident across
         # rounds (no host round-trip, no per-round sync) — the
-        # pre-participation behavior for client-stateful full runs
-        whole = C == pop.size and np.array_equal(ids, np.arange(C))
+        # pre-participation behavior for client-stateful full runs.
+        # Out-of-core stores opt out (store.in_memory): their state
+        # must stay on their shards, not in device buffers.
+        whole = (C == pop.size and pop.store.in_memory
+                 and np.array_equal(ids, np.arange(C)))
         state = {"server": server_state,
                  "clients": (pop.clients if whole
                              else pop.gather(method, ids))}
@@ -423,7 +443,9 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     if method.uses_groups and class_counts is not None \
             and group_spec is not None:
         gw = fusion_lib.presence_group_weights(class_counts, group_spec)
+    from repro.fl import statestore as statestore_lib
     pop = Population.from_parts(parts, group_weights=gw)
+    pop.use_store(statestore_lib.get(cfg.store, chunk_size=cfg.chunk_size))
     tiered = None
     if cfg.tiers is not None:
         from repro.fl import capacity as capacity_lib
@@ -442,7 +464,10 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
         engine = make_round_engine(task, cfg, global_params, mesh=mesh,
                                    use_kernel=use_kernel, method=method)
     server_state = engine.init_server_state(global_params)
-    pop.clients = engine.init_population_state(global_params, pop.size)
+    # round-0 per-client state: ONE row broadcast at population width by
+    # the store (the in-memory store builds the historical stacked tree
+    # bit-for-bit; the mmap store streams chunk-sized shards to disk)
+    pop.store.initialize(engine.init_client_row(global_params), pop.size)
 
     eval_engine, eval_tiles = None, None
     if task.predict_fn is not None:
@@ -455,10 +480,15 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     if checkpoint_dir and resume:
         from repro.checkpoint import io as ckpt_io
         if ckpt_io.checkpoint_exists(checkpoint_dir):
-            (start_round, global_params, server_state, pop.clients,
+            (start_round, global_params, server_state, clients,
              rng_state) = ckpt_io.load_fl_checkpoint(
                 checkpoint_dir, like_global=global_params,
-                like_server=server_state, like_clients=pop.clients)
+                like_server=server_state,
+                like_clients=(pop.clients if pop.store.in_memory
+                              else None),
+                store=pop.store)
+            if clients is not None:   # incremental stores restore their
+                pop.clients = clients  # shards in place and return None
             rng.bit_generator.state = rng_state
     already_complete = start_round >= cfg.rounds
 
@@ -503,7 +533,7 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
             ckpt_io.save_fl_checkpoint(
                 checkpoint_dir, round_idx=r + 1,
                 global_params=global_params, server_state=server_state,
-                client_state=pop.clients, rng=rng)
+                client_state=pop.store, rng=rng)
         if len(ids) == cfg.population:
             if full_ids is None:
                 full_ids = np.asarray(ids)
@@ -526,6 +556,7 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     history["acc"] = [_count_acc(c) for c in counts]
     history["wall_total"] = time.time() - t0
     history["final_params"] = global_params
+    pop.store.close()      # out-of-core stores drop their scratch shards
     return history
 
 

@@ -63,6 +63,10 @@ class ScenarioSpec:
     training times drawn from the seed-deterministic ``latency`` trace
     ("zero" | "pareto(a)" | "lognormal(sigma)") so a scenario can
     express stragglers. Sync scenarios keep the defaults.
+    store/chunk_size: client-state backend (fl/statestore.py,
+    DESIGN.md §13) — "memory" stacks all P client rows in RAM, "mmap"
+    keeps them in ``chunk_size``-row on-disk shards so server memory is
+    O(cohort). Either store yields bit-identical histories.
     """
     name: str
     summary: str
@@ -89,6 +93,8 @@ class ScenarioSpec:
     test_size: int = 400
     noise: float = 0.8
     eval_batch: int = 256
+    store: str = "memory"
+    chunk_size: int = 1024
     mode: str = "sync"
     buffer_k: int | None = None
     staleness: str = "constant"
@@ -116,6 +122,11 @@ class ScenarioSpec:
             mix = capacity_lib.parse_tiers(self.tiers)
             capacity_lib.validate_mix(mix, self.population)
             object.__setattr__(self, "tiers", mix)
+        from repro.fl import statestore as statestore_lib
+        if self.store not in statestore_lib.available():
+            raise ValueError(
+                f"unknown client-state store {self.store!r}; available: "
+                f"{', '.join(statestore_lib.available())}")
         if self.mode not in ("sync", "async"):
             raise ValueError(
                 f"ScenarioSpec.mode must be 'sync' or 'async', got "
@@ -187,6 +198,7 @@ class ScenarioSpec:
                         batch_size=self.batch_size, lr=self.lr,
                         momentum=self.momentum, method=self.method,
                         seed=self.seed, eval_batch=self.eval_batch,
+                        store=self.store, chunk_size=self.chunk_size,
                         tiers=self.tiers or None, mode=self.mode,
                         buffer_k=self.buffer_k, staleness=self.staleness)
 
@@ -380,6 +392,10 @@ register(ScenarioSpec(
     name="nxc2_fed2_tiers", protocol="nxc", method="fed2",
     tiers=((1.0, 2), (0.6, 2), (0.2, 2)),
     summary="N x C skew + group-whole 1.0/0.6/0.2 tiers, Fed2"))
+register(ScenarioSpec(
+    name="nxc2_fed2_tiers_cal", protocol="nxc", method="fed2", lr=0.02,
+    tiers=((1.0, 2), (0.6, 2), (0.2, 2)),
+    summary="N x C skew + group-whole tiers, Fed2 at calibrated lr"))
 register(ScenarioSpec(
     name="dir05_fed2_tiers", protocol="dirichlet", method="fed2", lr=0.01,
     tiers=((1.0, 2), (0.6, 2), (0.2, 2)),

@@ -1,0 +1,548 @@
+"""Out-of-core client-state store (DESIGN.md §13).
+
+Fed2's round math only ever touches the COHORT's rows, yet the historical
+``Population`` materialized the entire population in host RAM: per-client
+method state as stacked ``(P, ...)`` numpy arrays, shard indices as a
+list of P arrays, and ``save_fl_checkpoint`` rewrote every client each
+save. At P=10⁶ with scaffold-style control variates (a full model copy
+per client) that is hundreds of GB. This module makes server memory
+O(cohort), not O(P):
+
+- ``ClientStateStore``: the storage protocol behind ``Population`` —
+  ``initialize`` broadcasts one client's round-0 row to population
+  width, ``gather(ids)`` materializes exactly the cohort's rows,
+  ``scatter(ids, rows)`` writes them back. Implementations are
+  registered by name exactly like federated methods (fl/methods.py):
+  ``register`` / ``get`` / ``available()``; ``FLConfig.store`` is
+  validated against this registry.
+- ``InMemoryStore`` (``"memory"``): today's stacked-array behavior
+  bit-for-bit — one writable host numpy stack, scatter mutates rows in
+  place. O(P) RAM, zero I/O; the default.
+- ``MmapShardStore`` (``"mmap"``): client state lives on disk as
+  chunked ``.npy`` shards (``chunk_size`` rows per shard, one file per
+  (leaf, shard), written through checkpoint/io.py's atomic
+  tmp+``os.replace`` helper). ``gather`` memory-maps only the touched
+  shards and copies out the cohort's rows; ``scatter`` writes dirty
+  rows back through the same maps and records which shards changed, so
+  ``save_fl_checkpoint`` can flush ONLY dirty shards plus a small
+  manifest (incremental checkpoints, checkpoint/io.py).
+- ``ShardIndices``: the ragged per-client sample-index shards
+  (``Population.parts``) as one flat index array + an offsets array —
+  O(P) ints instead of P python objects, and mmap-able so
+  ``MmapShardStore.offload_aux`` can push parts/weights/presence rows
+  out of RAM too.
+
+The store only owns STORAGE; which rows move when stays with the method
+hooks (``FedMethod.gather_client_state`` / ``scatter_client_state``) and
+the host loop. ``AliasTable`` (Walker's method) lives here too: the
+O(cohort log P) weighted-sampler backend (fl/population.py) — O(P)
+build once per weights array, O(1) per draw, rejection for
+without-replacement cohorts.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Ragged shard indices: P clients' sample ids as flat + offsets
+# ---------------------------------------------------------------------------
+
+
+class ShardIndices:
+    """Per-client sample-index shards as ONE flat int64 array plus an
+    (P+1,) offsets array: client i's shard is
+    ``flat[offsets[i]:offsets[i+1]]``. Supports the two accesses the
+    runtime makes of ``Population.parts`` — ``len(parts)`` and
+    ``parts[i]`` — while costing O(P) ints (mmap-able) instead of P
+    python array objects."""
+
+    __slots__ = ("flat", "offsets")
+
+    def __init__(self, flat: np.ndarray, offsets: np.ndarray):
+        self.flat = flat
+        self.offsets = offsets
+
+    def __len__(self) -> int:
+        return len(self.offsets) - 1
+
+    def __getitem__(self, i) -> np.ndarray:
+        return self.flat[self.offsets[i]:self.offsets[i + 1]]
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self[i]
+
+    def lengths(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    @classmethod
+    def from_parts(cls, parts) -> "ShardIndices":
+        if isinstance(parts, cls):
+            return parts
+        offsets = np.zeros(len(parts) + 1, np.int64)
+        np.cumsum([len(p) for p in parts], out=offsets[1:])
+        flat = (np.concatenate([np.asarray(p, np.int64) for p in parts])
+                if offsets[-1] else np.zeros(0, np.int64))
+        return cls(flat, offsets)
+
+    @classmethod
+    def striped(cls, n_samples: int, population: int) -> "ShardIndices":
+        """Round-robin striping of ``n_samples`` over ``population``
+        clients (client i holds samples {j : j ≡ i mod P}) — the cheap
+        synthetic partition for million-client benches, built with two
+        vectorized ops instead of P python loops. Clients past the
+        sample count hold empty shards (batch packing indexes sample 0
+        for them, exactly like any empty partition shard)."""
+        counts = np.full(population, n_samples // population, np.int64)
+        counts[:n_samples % population] += 1
+        offsets = np.zeros(population + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        flat = np.argsort(np.arange(n_samples, dtype=np.int64) % population,
+                          kind="stable").astype(np.int64)
+        return cls(flat, offsets)
+
+
+# ---------------------------------------------------------------------------
+# Walker alias table: O(1) weighted draws after an O(P) build
+# ---------------------------------------------------------------------------
+
+
+class AliasTable:
+    """Walker/Vose alias table over nonnegative weights.
+
+    Build is O(P) and DETERMINISTIC (pure function of the weights — the
+    seed-stability property tests/test_properties.py pins); each draw is
+    O(1): pick column j uniformly, accept j with probability prob[j],
+    else take alias[j]. Zero-weight entries get prob 0 and an alias
+    pointing at a positive-weight entry, so they are NEVER sampled."""
+
+    __slots__ = ("prob", "alias", "n", "n_nonzero")
+
+    def __init__(self, weights):
+        w = np.asarray(weights, np.float64)
+        if w.ndim != 1 or len(w) == 0:
+            raise ValueError("AliasTable needs a non-empty 1-D weight "
+                             f"array, got shape {w.shape}")
+        if not np.isfinite(w).all() or (w < 0).any():
+            raise ValueError("AliasTable weights must be finite and "
+                             "non-negative")
+        total = float(w.sum())
+        if total <= 0.0:
+            raise ValueError("AliasTable weights sum to zero: no client "
+                             "is sampleable")
+        n = len(w)
+        self.n = n
+        self.n_nonzero = int(np.count_nonzero(w))
+        p = w * (n / total)
+        prob = np.ones(n, np.float64)
+        alias = np.arange(n, dtype=np.int64)
+        small = list(np.nonzero(p < 1.0)[0][::-1])
+        large = list(np.nonzero(p >= 1.0)[0][::-1])
+        while small and large:
+            s, lg = small.pop(), large.pop()
+            prob[s] = p[s]
+            alias[s] = lg
+            p[lg] -= 1.0 - p[s]
+            (large if p[lg] >= 1.0 else small).append(lg)
+        # Zero-weight columns the loop paired carry prob 0.0 exactly
+        # (p[s] = 0) and their alias redirects the column's full mass to
+        # a positive-weight entry — leave those alone. Float drift can
+        # strand a true-zero entry in the residual (prob still 1.0,
+        # sampleable); re-pin only those: prob 0, alias at the heaviest.
+        stranded = (w == 0.0) & (prob != 0.0)
+        if stranded.any():
+            prob[stranded] = 0.0
+            alias[stranded] = int(np.argmax(w))
+        self.prob, self.alias = prob, alias
+
+    def draw(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        """``size`` independent draws WITH replacement, O(size)."""
+        j = rng.integers(0, self.n, size=size)
+        return np.where(rng.random(size) < self.prob[j], j,
+                        self.alias[j]).astype(np.int64)
+
+    def sample_without_replacement(self, rng: np.random.Generator,
+                                   k: int) -> np.ndarray:
+        """k DISTINCT indices by rejection over ``draw`` — expected
+        O(k log P) vectorized draws while k stays well under the nonzero
+        support (the cohort ≪ population regime this table exists for).
+        Returns sorted unique ids."""
+        if k > self.n_nonzero:
+            raise ValueError(
+                f"cannot sample {k} distinct clients: only "
+                f"{self.n_nonzero} of {self.n} have nonzero weight")
+        chosen: list[int] = []
+        seen = set()
+        while len(chosen) < k:
+            for j in self.draw(rng, max(2 * (k - len(chosen)), 16)):
+                if j not in seen:
+                    seen.add(j)
+                    chosen.append(int(j))
+                    if len(chosen) == k:
+                        break
+        return np.sort(np.asarray(chosen, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Store protocol + registry (mirrors fl/methods.py)
+# ---------------------------------------------------------------------------
+
+
+class ClientStateStore:
+    """Storage protocol behind ``Population``'s per-client method state.
+
+    ``in_memory`` gates the whole-population device-resident fast path
+    of fl/runtime.py (state may live as device arrays between rounds);
+    ``incremental`` advertises dirty-shard flushing to
+    ``save_fl_checkpoint`` (checkpoint/io.py duck-types on it)."""
+
+    name: str = ""
+    summary: str = ""          # one line for the README store table
+    in_memory: bool = True
+    incremental: bool = False
+
+    def initialize(self, row_tree: PyTree, population: int) -> None:
+        """Broadcast ONE client's round-0 state tree (host numpy,
+        ``RoundEngine.init_client_row``) to population width."""
+        raise NotImplementedError
+
+    def gather(self, ids) -> PyTree:
+        """Rows ``ids`` -> a stacked (len(ids), ...) host tree."""
+        raise NotImplementedError
+
+    def scatter(self, ids, rows: PyTree) -> None:
+        """Write stacked rows back to ``ids``; untouched rows keep their
+        values bit-for-bit."""
+        raise NotImplementedError
+
+    @property
+    def tree(self) -> PyTree:
+        """The full (P, ...) stacked tree (``Population.clients``).
+        Only in-memory stores can afford this."""
+        raise NotImplementedError
+
+    def adopt(self, stacked: PyTree) -> None:
+        """Take ownership of a full (P, ...) stack (the device-resident
+        fast path and checkpoint restore hand stacks back)."""
+        raise NotImplementedError
+
+    def offload_aux(self, pop) -> None:
+        """Optionally take over the population's parts/weights/presence
+        storage (out-of-core stores push them to disk)."""
+
+    def close(self) -> None:
+        """Release resources (out-of-core stores drop their scratch
+        dir). The store is dead afterwards."""
+
+
+_REGISTRY: dict[str, type[ClientStateStore]] = {}
+
+
+def register(cls: type[ClientStateStore]) -> type[ClientStateStore]:
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available() -> tuple[str, ...]:
+    """All registered store names, sorted (the canonical enumeration for
+    CLIs, the README store table, and FLConfig validation)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str, **kwargs) -> ClientStateStore:
+    """Construct a fresh store instance by registry name."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown client-state store {name!r}; available: "
+            f"{', '.join(available())}") from None
+    return cls(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# InMemoryStore: the historical stacked-array behavior, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@register
+class InMemoryStore(ClientStateStore):
+    """Stacked ``(P, ...)`` host arrays, scatter mutates rows IN PLACE —
+    exactly the pre-store ``Population.clients`` semantics (the buffer
+    identity across rounds is pinned by tests/test_population.py). O(P)
+    RAM; the default store."""
+
+    name = "memory"
+    summary = "stacked (P, ...) host arrays, in-place row writes; O(P) RAM"
+    in_memory = True
+    incremental = False
+
+    def __init__(self, chunk_size: int | None = None, dir: str | None = None):
+        # chunk_size/dir accepted for constructor parity with the
+        # out-of-core store (FLConfig passes both); neither applies here
+        self._tree: PyTree = ()
+
+    def initialize(self, row_tree, population):
+        self._tree = jax.tree_util.tree_map(
+            lambda l: np.array(
+                np.broadcast_to(l[None], (population,) + l.shape)),
+            row_tree)
+
+    def gather(self, ids):
+        ids = np.asarray(ids)
+        return jax.tree_util.tree_map(lambda a: a[ids], self._tree)
+
+    def scatter(self, ids, rows):
+        ids = np.asarray(ids)
+
+        def put(a, new):
+            a = np.asarray(a)
+            if not a.flags.writeable:     # handed a device tree: copy once
+                a = np.array(a)
+            a[ids] = np.asarray(new)
+            return a
+
+        self._tree = jax.tree_util.tree_map(put, self._tree, rows)
+
+    @property
+    def tree(self):
+        return self._tree
+
+    def adopt(self, stacked):
+        self._tree = stacked
+
+
+# ---------------------------------------------------------------------------
+# MmapShardStore: chunked npy shards on disk, O(cohort) resident
+# ---------------------------------------------------------------------------
+
+
+@register
+class MmapShardStore(ClientStateStore):
+    """Client state as chunked ``.npy`` shards on disk, memory-mapped.
+
+    Shard layout: leaf k of the per-client state tree, rows
+    [c*chunk_size, (c+1)*chunk_size) -> ``leaf{k}-c{c}.npy`` under the
+    store dir, written atomically (checkpoint/io.py tmp+``os.replace``).
+    ``gather`` opens (and caches) a read-write memory map per touched
+    shard and copies out only the cohort's rows; ``scatter`` writes the
+    dirty rows back through the map and records the shard in
+    ``dirty_shards`` — the set ``save_fl_checkpoint`` flushes
+    incrementally (``checkpoint_shards``; clean shards keep their
+    previously-published checkpoint file). Resident memory is O(cohort)
+    + page cache the OS may reclaim; the full population never
+    materializes on the host."""
+
+    name = "mmap"
+    summary = ("chunked mmap npy shards on disk, streaming gather/"
+               "scatter + dirty tracking; O(cohort) RAM")
+    in_memory = False
+    incremental = True
+
+    def __init__(self, chunk_size: int = 1024, dir: str | None = None):
+        if (not isinstance(chunk_size, int) or isinstance(chunk_size, bool)
+                or chunk_size <= 0):
+            raise ValueError(
+                f"MmapShardStore chunk_size must be a positive int (rows "
+                f"per shard), got {chunk_size!r}")
+        self.chunk_size = chunk_size
+        self._owns_dir = dir is None
+        self._dir = dir
+        self.population = 0
+        self.n_shards = 0
+        self._treedef = None
+        self._leaf_meta: list[tuple[tuple, np.dtype]] = []  # (shape, dtype)
+        self._maps: dict[tuple[int, int], np.memmap] = {}
+        self.dirty_shards: set[int] = set()
+        # shard -> published checkpoint filename (incremental manifests)
+        self._ckpt_files: dict[str, str] = {}
+
+    # -- layout -------------------------------------------------------------
+
+    @property
+    def dir(self) -> str:
+        if self._dir is None:
+            self._dir = tempfile.mkdtemp(prefix="repro-statestore-")
+        return self._dir
+
+    def _shard_path(self, k: int, c: int) -> str:
+        return os.path.join(self.dir, f"leaf{k}-c{c}.npy")
+
+    def _shard_rows(self, c: int) -> int:
+        return min(self.chunk_size, self.population - c * self.chunk_size)
+
+    def layout(self) -> dict:
+        """The JSON-able shard layout a checkpoint manifest pins (and
+        ``restore_shards`` validates against)."""
+        return {"population": self.population,
+                "chunk_size": self.chunk_size,
+                "n_shards": self.n_shards,
+                "leaves": [{"shape": list(s), "dtype": str(d)}
+                           for s, d in self._leaf_meta]}
+
+    def initialize(self, row_tree, population):
+        flat, self._treedef = jax.tree_util.tree_flatten(row_tree)
+        rows = [np.asarray(l) for l in flat]
+        self._leaf_meta = [(tuple(l.shape), l.dtype) for l in rows]
+        self.population = int(population)
+        self.n_shards = -(-self.population // self.chunk_size)
+        self._maps.clear()
+        self.dirty_shards.clear()
+        self._ckpt_files.clear()
+        os.makedirs(self.dir, exist_ok=True)
+        for c in range(self.n_shards):
+            n = self._shard_rows(c)
+            for k, row in enumerate(rows):
+                ckpt_io.write_array_atomic(
+                    self._shard_path(k, c),
+                    np.broadcast_to(row[None], (n,) + row.shape))
+
+    # -- row movement -------------------------------------------------------
+
+    def _map(self, k: int, c: int) -> np.memmap:
+        mm = self._maps.get((k, c))
+        if mm is None:
+            mm = np.lib.format.open_memmap(self._shard_path(k, c),
+                                           mode="r+")
+            self._maps[(k, c)] = mm
+        return mm
+
+    def _by_shard(self, ids):
+        ids = np.asarray(ids, np.int64)
+        shards = ids // self.chunk_size
+        for c in np.unique(shards):
+            mask = shards == c
+            yield int(c), mask, ids[mask] - c * self.chunk_size
+
+    def gather(self, ids):
+        ids = np.asarray(ids, np.int64)
+        out = [np.empty((len(ids),) + shape, dtype)
+               for shape, dtype in self._leaf_meta]
+        for c, mask, rows in self._by_shard(ids):
+            for k in range(len(out)):
+                out[k][mask] = self._map(k, c)[rows]
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    def scatter(self, ids, rows_tree):
+        ids = np.asarray(ids, np.int64)
+        flat = [np.asarray(l) for l in
+                jax.tree_util.tree_leaves(rows_tree)]
+        for c, mask, rows in self._by_shard(ids):
+            for k, leaf in enumerate(flat):
+                self._map(k, c)[rows] = leaf[mask]
+            self.dirty_shards.add(c)
+
+    @property
+    def tree(self):
+        raise RuntimeError(
+            "MmapShardStore holds the population out of core and never "
+            "materializes the full (P, ...) stack; gather the cohort's "
+            "rows instead (store.gather(ids))")
+
+    def adopt(self, stacked):
+        flat = jax.tree_util.tree_leaves(stacked)
+        if flat and len(np.asarray(flat[0])) != self.population:
+            raise ValueError(
+                f"adopt got a {len(np.asarray(flat[0]))}-row stack for a "
+                f"population of {self.population}")
+        self.scatter(np.arange(self.population, dtype=np.int64), stacked)
+
+    # -- aux offload: parts / weights / presence rows -----------------------
+
+    def offload_aux(self, pop) -> None:
+        """Move the population's O(P) side arrays out of RAM: parts as
+        flat+offsets, weights, and the (P, G) presence rows each become
+        an on-disk ``.npy`` reopened as a read-only memory map (fancy
+        indexing a memmap with the cohort's ids materializes only those
+        rows — exactly ``pad_tile_inputs``'s access pattern)."""
+        def _mm(name, arr):
+            path = os.path.join(self.dir, f"aux-{name}.npy")
+            ckpt_io.write_array_atomic(path, np.ascontiguousarray(arr))
+            return np.load(path, mmap_mode="r")
+
+        os.makedirs(self.dir, exist_ok=True)
+        parts = ShardIndices.from_parts(pop.parts)
+        pop.parts = ShardIndices(_mm("parts-flat", parts.flat),
+                                 _mm("parts-offsets", parts.offsets))
+        pop.weights = _mm("weights", pop.weights)
+        if pop.group_weights is not None:
+            pop.group_weights = _mm("group-weights", pop.group_weights)
+
+    # -- incremental checkpointing (driven by checkpoint/io.py) -------------
+
+    def checkpoint_shards(self, clients_dir: str, step: int) -> dict:
+        """Flush DIRTY shards into ``clients_dir`` as step-versioned
+        copies and return the full shard->filename map for the manifest:
+        dirty (or never-published) shards get fresh ``-r{step}`` files
+        written atomically; clean shards keep the filename the previous
+        manifest published. The caller publishes the manifest and THEN
+        prunes (``prune_checkpoint_files``) — a crash in between leaves
+        the previous manifest's files intact."""
+        os.makedirs(clients_dir, exist_ok=True)
+        files = dict(self._ckpt_files)
+        for c in range(self.n_shards):
+            for k in range(len(self._leaf_meta)):
+                key = f"{k}:{c}"
+                if c in self.dirty_shards or key not in files:
+                    name = f"leaf{k}-c{c}-r{step}.npy"
+                    ckpt_io.write_array_atomic(
+                        os.path.join(clients_dir, name),
+                        np.asarray(self._map(k, c)))
+                    files[key] = name
+        self.dirty_shards.clear()
+        self._ckpt_files = files
+        return dict(files)
+
+    def prune_checkpoint_files(self, clients_dir: str) -> None:
+        """Best-effort removal of superseded shard files (anything not
+        named by the just-published manifest)."""
+        keep = set(self._ckpt_files.values())
+        try:
+            names = os.listdir(clients_dir)
+        except OSError:
+            return
+        for name in names:
+            if name.endswith(".npy") and name not in keep:
+                try:
+                    os.remove(os.path.join(clients_dir, name))
+                except OSError:
+                    pass
+
+    def restore_shards(self, clients_dir: str, manifest: dict) -> None:
+        """Load a checkpoint published by ``checkpoint_shards`` back
+        into the working shards (mid-run resume). The manifest's layout
+        must match this store's — the shapes/dtypes/chunking are part of
+        the run's identity, exactly like ``load_checkpoint``'s
+        shape/dtype checks."""
+        want, have = manifest.get("layout"), self.layout()
+        if want != have:
+            raise ValueError(
+                f"checkpointed client-store layout {want} does not match "
+                f"the configured store {have}; resume with the same "
+                "population/chunk_size/method")
+        for key, name in manifest["files"].items():
+            k, c = (int(x) for x in key.split(":"))
+            arr = np.load(os.path.join(clients_dir, name))
+            self._map(k, c)[...] = arr
+        self.dirty_shards.clear()
+        self._ckpt_files = dict(manifest["files"])
+
+    def close(self):
+        self._maps.clear()
+        if self._owns_dir and self._dir and os.path.isdir(self._dir):
+            shutil.rmtree(self._dir, ignore_errors=True)
+        self._dir = None if self._owns_dir else self._dir

@@ -131,7 +131,8 @@ def run_fl(args):
                   batch_size=args.batch, lr=args.lr, momentum=0.9,
                   method=args.method, seed=args.seed,
                   tiers=args.tiers or None, mode=args.fed_mode,
-                  buffer_k=args.buffer_k, staleness=args.staleness)
+                  buffer_k=args.buffer_k, staleness=args.staleness,
+                  store=args.store, chunk_size=args.chunk_size)
     h = run_federated(cnn_task(cfg), fl, parts, get_batch, test_batches,
                       latency=args.latency, log=print)
     print("final acc:", h["acc"][-1])
@@ -141,6 +142,7 @@ def run_fl(args):
 def main():
     from repro.fl import methods as methods_lib
     from repro.fl import population as population_lib
+    from repro.fl import statestore as statestore_lib
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["lm", "fl"], default="fl")
@@ -165,6 +167,15 @@ def main():
     ap.add_argument("--sampler", default="full",
                     choices=list(population_lib.available()),
                     help="per-round participation strategy")
+    ap.add_argument("--store", default="memory",
+                    choices=list(statestore_lib.available()),
+                    help="fl mode: client-state store backend — 'memory' "
+                         "stacks all P client rows in RAM; 'mmap' keeps "
+                         "them in chunked on-disk shards so server memory "
+                         "is O(cohort) (fl/statestore.py)")
+    ap.add_argument("--chunk-size", type=int, default=1024,
+                    help="fl mode: client rows per on-disk shard for "
+                         "--store mmap")
     ap.add_argument("--tiers", default="",
                     help="fl mode: heterogeneous capacity tiers as "
                          "<width>x<count> pairs summing to --nodes, e.g. "

@@ -137,6 +137,85 @@ def test_resume_of_finished_run_reports_final_eval(tmp_path):
     assert third["round"] == [1] and third["acc"] == again["acc"]
 
 
+@pytest.mark.parametrize("method,sampler", [
+    ("fedavgm", "uniform"),      # server state + rng-driven sampling
+    ("scaffold", "full"),        # per-client population state (sharded)
+])
+def test_mmap_store_resume_is_bit_identical(tmp_path, method, sampler):
+    """The incremental-checkpoint pin (DESIGN.md §13): a mid-run resume
+    through the MmapShardStore — dirty shards flushed each save, clean
+    shards reused from earlier manifests — equals the uninterrupted run
+    bit-for-bit."""
+    cfg = vgg9.reduced(n_classes=10, fed2_groups=0, norm="none")
+    parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)
+    kw = dict(store="mmap", chunk_size=2)
+    if sampler == "uniform":
+        kw.update(sampler="uniform", cohort_size=2)
+    task = cnn_task(cfg)
+    straight = run_federated(task, _fl(method, 4, **kw), parts,
+                             _get_batch, _TEST_BATCHES)
+
+    ck = str(tmp_path / "ck")
+    run_federated(task, _fl(method, 2, **kw), parts, _get_batch,
+                  _TEST_BATCHES, checkpoint_dir=ck)
+    assert ckpt_io.checkpoint_step(ck) == 2
+    resumed = run_federated(task, _fl(method, 4, **kw), parts,
+                            _get_batch, _TEST_BATCHES,
+                            checkpoint_dir=ck, resume=True)
+    assert resumed["round"] == [2, 3]
+    assert resumed["acc"] == straight["acc"][2:]
+    for a, b in zip(jax.tree_util.tree_leaves(resumed["final_params"]),
+                    jax.tree_util.tree_leaves(straight["final_params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_incremental_save_flushes_only_dirty_shards(tmp_path):
+    """Round-robin over population 4 at cohort 2 with chunk_size 2:
+    round 0 touches only shard 0, round 1 only shard 1 — so the step-2
+    manifest must REUSE the step-1 files for shard 0 and publish fresh
+    ``-r2`` files only for shard 1. Pruning keeps exactly the published
+    set."""
+    import json
+    import os
+
+    from repro.fl import statestore
+
+    cfg = vgg9.reduced(n_classes=10, fed2_groups=0, norm="none")
+    parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)
+    ck = str(tmp_path / "ck")
+    run_federated(cnn_task(cfg),
+                  _fl("scaffold", 2, store="mmap", chunk_size=2,
+                      sampler="round_robin", cohort_size=2),
+                  parts, _get_batch, _TEST_BATCHES, checkpoint_dir=ck)
+    with open(os.path.join(ck, "manifest.json")) as f:
+        manifest = json.load(f)
+    cs = manifest["extra"]["client_store"]
+    assert cs["layout"]["chunk_size"] == 2
+    assert cs["layout"]["n_shards"] == 2
+    by_shard = {c: {name.rsplit("-r", 1)[1]
+                    for key, name in cs["files"].items()
+                    if key.endswith(f":{c}")} for c in (0, 1)}
+    # shard 0 (clients 0,1) last trained in round 0 -> its files still
+    # carry the step-1 stamp; shard 1 (clients 2,3) was dirtied in round
+    # 1 -> republished at step 2
+    assert by_shard[0] == {"1.npy"}, cs["files"]
+    assert by_shard[1] == {"2.npy"}, cs["files"]
+    on_disk = {n for n in os.listdir(os.path.join(ck, "clients"))
+               if n.endswith(".npy")}
+    assert on_disk == set(cs["files"].values())   # pruned to the manifest
+    # the historical whole-stack format has no clients/ dir and no
+    # client_store manifest entry; an in-memory run cannot resume this
+    with pytest.raises(ValueError, match="store"):
+        ckpt_io.load_fl_checkpoint(ck, like_global={}, like_server={})
+    # a mismatched layout (different chunking) refuses too
+    other = statestore.MmapShardStore(chunk_size=4)
+    other.initialize({"a": np.zeros(3, np.float32)}, 4)
+    with pytest.raises(ValueError, match="layout"):
+        ckpt_io.load_fl_checkpoint(ck, like_global={}, like_server={},
+                                   store=other)
+    other.close()
+
+
 def test_checkpoint_every_validated(tmp_path):
     cfg = vgg9.reduced(n_classes=10, fed2_groups=0, norm="none")
     parts = nxc_partition(_DS.labels, 4, 5, 10, seed=0)

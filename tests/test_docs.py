@@ -18,8 +18,9 @@ def test_design_md_exists_with_cited_sections():
     # the sections the codebase cites (§6 = method protocol; the former
     # §7 Data/§7.1 Synthetic renumbered to §8/§8.1 when §6 was inserted;
     # §9 = population & participation; §10 = scenarios & evaluation;
-    # §11 = heterogeneous capacity; §12 = buffered-async federation)
-    for must in ("3", "5", "6", "8.1", "9", "10", "11", "12",
+    # §11 = heterogeneous capacity; §12 = buffered-async federation;
+    # §13 = out-of-core client state)
+    for must in ("3", "5", "6", "8.1", "9", "10", "11", "12", "13",
                  "Shape-applicability"):
         assert must in sections, (must, sections)
 
@@ -111,6 +112,43 @@ def test_design_documents_buffered_async():
         assert needle in s12, f"DESIGN.md §12 lost {needle!r}"
 
 
+def test_readme_store_table_matches_registry():
+    """The README client-state store table is generated from the
+    fl/statestore.py registry: every registered store appears as a table
+    row with its summary line."""
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.fl import statestore
+    readme = (ROOT / "README.md").read_text()
+    for name in statestore.available():
+        store = statestore.get(name)
+        row = f"| `{name}` |"
+        assert row in readme, f"README store table misses {row}"
+        assert store.summary in readme, (name, store.summary)
+
+
+def test_readme_documents_store_flags():
+    """The README must carry the out-of-core store flags and the cohort
+    benchmark entry points, matching the FLConfig knobs."""
+    readme = (ROOT / "README.md").read_text()
+    for needle in ("`--store`", "`--chunk-size`", "bench_cohort",
+                   "make bench-population"):
+        assert needle in readme, f"README store section lost {needle!r}"
+
+
+def test_design_documents_out_of_core():
+    """DESIGN.md §13 must keep describing the store protocol, the shard
+    layout, the alias-table sampler and the equivalence/resume pins —
+    the contracts tests/test_statestore.py pins in code."""
+    text = (ROOT / "DESIGN.md").read_text()
+    s13 = text.split("## §13")[1].split("\n## ")[0]
+    for needle in ("ClientStateStore", "InMemoryStore", "MmapShardStore",
+                   "chunk_size", "dirty", "os.replace", "AliasTable",
+                   "offload_aux", "incremental", "BIT-IDENTICAL",
+                   "bench_cohort"):
+        assert needle in s13, f"DESIGN.md §13 lost {needle!r}"
+
+
 def test_readme_documents_async_mode():
     """The README must carry the buffered-async section: the mode/flag
     table rows and the equivalence pin, matching the FLConfig knobs."""
@@ -140,9 +178,22 @@ def test_readme_tier_table_covers_registered_widths():
 
 def test_makefile_has_tier_and_drift_targets():
     mk = (ROOT / "Makefile").read_text()
-    for target in ("bench-tiers:", "bench-async:", "check-drift:"):
+    for target in ("bench-tiers:", "bench-async:", "check-drift:",
+                   "bench-population:"):
         assert target in mk, f"Makefile lost {target}"
     assert "check_drift.py" in mk
+    assert "REPRO_BENCH_POPULATIONS" in mk, \
+        "bench-population lost its population ladder"
+
+
+def test_ci_smoke_runs_cohort_bench_through_mmap_store():
+    """The CI smoke job must keep the out-of-core rung: bench_cohort at
+    a bounded population through the mmap store (REPRO_BENCH_POPULATIONS
+    caps the ladder so the smoke stays minutes, not hours)."""
+    ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
+    assert "bench_cohort" in ci, "CI smoke lost the cohort benchmark"
+    assert "REPRO_BENCH_POPULATIONS" in ci, \
+        "CI cohort bench lost its population cap"
 
 
 def test_ci_has_perf_drift_gate_and_concurrency():

@@ -149,6 +149,78 @@ def test_round_robin_covers_population():
 
 
 # ---------------------------------------------------------------------------
+# Sampler edge cases (the contracts DESIGN.md §9 states)
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_sampler_never_draws_zero_weight_clients():
+    """A zero-weight client (an empty shard a caller chose not to floor)
+    must NEVER be sampled, over many rounds."""
+    s = population_lib.get("weighted")
+    w = np.array([0.0, 3.0, 0.0, 1.0, 2.0, 0.0, 4.0, 5.0])
+    rng = np.random.default_rng(0)
+    for r in range(200):
+        ids = s.sample(r, 8, 3, rng, weights=w)
+        assert not np.isin(ids, [0, 2, 5]).any(), (r, ids)
+
+
+def test_weighted_sampler_rejects_all_zero_weights():
+    s = population_lib.get("weighted")
+    with pytest.raises(ValueError, match="zero"):
+        s.sample(0, 4, 2, np.random.default_rng(0),
+                 weights=np.zeros(4))
+
+
+def test_weighted_sampler_rejects_cohort_beyond_support():
+    """cohort_size > #nonzero-weight clients cannot yield distinct ids —
+    refuse instead of looping forever in rejection sampling."""
+    s = population_lib.get("weighted")
+    with pytest.raises(ValueError, match="distinct"):
+        s.sample(0, 5, 3, np.random.default_rng(0),
+                 weights=np.array([0.0, 1.0, 0.0, 2.0, 0.0]))
+
+
+def test_weighted_sampler_reuses_alias_table_per_weights_array():
+    """The O(P) alias build runs ONCE per weights array: same array
+    object -> same cached table; a different array triggers a rebuild."""
+    s = population_lib.get("weighted")
+    w = np.arange(1.0, 9.0)
+    rng = np.random.default_rng(0)
+    s.sample(0, 8, 3, rng, weights=w)
+    t0 = s._table
+    s.sample(1, 8, 3, rng, weights=w)
+    assert s._table is t0
+    s.sample(2, 8, 3, rng, weights=np.arange(1.0, 9.0))
+    assert s._table is not t0
+
+
+def test_uniform_and_weighted_return_sorted_unique_cohorts():
+    rng = np.random.default_rng(3)
+    for name in ("uniform", "weighted"):
+        s = population_lib.get(name)
+        for r in range(20):
+            ids = s.sample(r, 12, 5, rng,
+                           weights=np.arange(1.0, 13.0))
+            assert len(np.unique(ids)) == 5
+            np.testing.assert_array_equal(ids, np.sort(ids))
+
+
+def test_round_robin_wraps_deterministically_without_rng():
+    """round_robin is a pure function of (round, P, C): wrapping windows
+    are reproducible and never consume the rng stream (the batch-packing
+    stream must stay aligned across reruns)."""
+    s = population_lib.get("round_robin")
+    rng = np.random.default_rng(0)
+    state_before = rng.bit_generator.state
+    np.testing.assert_array_equal(s.sample(0, 5, 3, rng), [0, 1, 2])
+    np.testing.assert_array_equal(s.sample(1, 5, 3, rng), [3, 4, 0])
+    np.testing.assert_array_equal(s.sample(2, 5, 3, rng), [1, 2, 3])
+    # period P rounds later the same window returns
+    np.testing.assert_array_equal(s.sample(5, 5, 3, rng), [0, 1, 2])
+    assert rng.bit_generator.state == state_before    # rng untouched
+
+
+# ---------------------------------------------------------------------------
 # Partial participation: absent clients keep their state
 # ---------------------------------------------------------------------------
 

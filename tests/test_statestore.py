@@ -1,0 +1,328 @@
+"""Out-of-core client-state store (fl/statestore.py, DESIGN.md §13):
+registry contract; InMemoryStore vs MmapShardStore run_federated
+histories BIT-IDENTICAL for every stateful regime (scaffold rows,
+fedavgm + population, fed2 presence rows); streaming gather/scatter row
+semantics + dirty tracking; ShardIndices; AliasTable edge cases."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg9
+from repro.data.synthetic import make_image_dataset, nxc_partition
+from repro.fl import statestore
+from repro.fl.runtime import FLConfig, cnn_task, run_federated
+
+_DS = make_image_dataset(240, n_classes=4, seed=0, noise=0.8)
+_TEST = make_image_dataset(80, n_classes=4, seed=9, noise=0.8)
+
+
+def _get_batch(sel):
+    return {"images": jnp.asarray(_DS.images[sel]),
+            "labels": jnp.asarray(_DS.labels[sel])}
+
+
+_TEST_BATCHES = [{"images": jnp.asarray(_TEST.images),
+                  "labels": jnp.asarray(_TEST.labels)}]
+
+
+def _plain_cfg():
+    return vgg9.reduced(n_classes=4, fed2_groups=0, norm="none")
+
+
+def _fl(method, store, *, population=6, cohort_size=None, sampler="full",
+        rounds=3, chunk_size=2, momentum=0.9):
+    return FLConfig(population=population, cohort_size=cohort_size,
+                    sampler=sampler, rounds=rounds, local_epochs=1,
+                    steps_per_epoch=2, batch_size=8, lr=0.02,
+                    momentum=momentum, method=method, seed=0,
+                    store=store, chunk_size=chunk_size)
+
+
+def _row_tree():
+    return {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.asarray(1.5, np.float64)}
+
+
+# ---------------------------------------------------------------------------
+# Registry + FLConfig validation
+# ---------------------------------------------------------------------------
+
+
+def test_store_registry_contents():
+    avail = statestore.available()
+    for name in ("memory", "mmap"):
+        assert name in avail, (name, avail)
+    assert avail == tuple(sorted(avail))
+    for name in avail:
+        st = statestore.get(name, chunk_size=4)
+        assert isinstance(st, statestore.ClientStateStore)
+        assert st.summary
+        st.close()
+
+
+def test_get_unknown_store_lists_available():
+    with pytest.raises(ValueError, match="memory"):
+        statestore.get("not-a-store")
+
+
+def test_flconfig_validates_store_and_chunk_size():
+    with pytest.raises(ValueError, match="store"):
+        FLConfig(population=4, store="mmpa")
+    with pytest.raises(ValueError, match="chunk_size"):
+        FLConfig(population=4, chunk_size=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        FLConfig(population=4, chunk_size=True)
+    for name in statestore.available():
+        FLConfig(population=4, store=name, chunk_size=2)
+
+
+def test_mmap_store_validates_chunk_size():
+    with pytest.raises(ValueError, match="chunk_size"):
+        statestore.MmapShardStore(chunk_size=0)
+
+
+# ---------------------------------------------------------------------------
+# Row semantics: gather/scatter/adopt across both stores
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["memory", "mmap"])
+def test_gather_scatter_row_semantics(name):
+    """Untouched rows keep their values bit-for-bit; scattered rows read
+    back exactly; gather stacks in id order."""
+    st = statestore.get(name, chunk_size=4)
+    row = _row_tree()
+    st.initialize(row, 10)
+    ids = np.array([0, 3, 9])
+    g = st.gather(ids)
+    assert g["a"].shape == (3, 2, 3) and g["b"].shape == (3,)
+    for i in range(3):
+        np.testing.assert_array_equal(g["a"][i], row["a"])
+    g["a"] = g["a"] + np.arange(3, dtype=np.float32)[:, None, None]
+    st.scatter(ids, g)
+    back = st.gather(np.arange(10))
+    for i, delta in zip(ids, (0.0, 1.0, 2.0)):
+        np.testing.assert_array_equal(back["a"][i], row["a"] + delta)
+    for i in set(range(10)) - set(ids.tolist()):
+        np.testing.assert_array_equal(back["a"][i], row["a"])
+    st.close()
+
+
+@pytest.mark.parametrize("name", ["memory", "mmap"])
+def test_adopt_round_trips_full_stack(name):
+    st = statestore.get(name, chunk_size=3)
+    st.initialize(_row_tree(), 7)
+    stack = {"a": np.random.default_rng(0).normal(
+        size=(7, 2, 3)).astype(np.float32),
+        "b": np.arange(7, dtype=np.float64)}
+    st.adopt(stack)
+    got = st.gather(np.arange(7))
+    np.testing.assert_array_equal(got["a"], stack["a"])
+    np.testing.assert_array_equal(got["b"], stack["b"])
+    st.close()
+
+
+def test_mmap_store_refuses_full_tree():
+    st = statestore.get("mmap", chunk_size=4)
+    st.initialize(_row_tree(), 10)
+    with pytest.raises(RuntimeError, match="gather"):
+        st.tree
+    st.close()
+
+
+def test_mmap_adopt_rejects_wrong_population():
+    st = statestore.get("mmap", chunk_size=4)
+    st.initialize(_row_tree(), 10)
+    with pytest.raises(ValueError, match="population"):
+        st.adopt({"a": np.zeros((3, 2, 3), np.float32),
+                  "b": np.zeros(3)})
+    st.close()
+
+
+def test_mmap_dirty_tracking_is_per_shard():
+    """scatter records exactly the touched shards; a checkpoint flush
+    clears the set."""
+    st = statestore.get("mmap", chunk_size=4)
+    st.initialize(_row_tree(), 10)          # shards 0:[0,4) 1:[4,8) 2:[8,10)
+    assert st.dirty_shards == set()
+    rows = st.gather(np.array([1, 9]))
+    st.scatter(np.array([1, 9]), rows)
+    assert st.dirty_shards == {0, 2}
+    st.close()
+
+
+def test_mmap_store_disk_layout_and_close(tmp_path):
+    """One .npy per (leaf, chunk); close() drops a store-owned scratch
+    dir but leaves a caller-provided one alone."""
+    st = statestore.MmapShardStore(chunk_size=4, dir=str(tmp_path / "s"))
+    st.initialize(_row_tree(), 10)
+    names = sorted(os.listdir(tmp_path / "s"))
+    assert names == [f"leaf{k}-c{c}.npy" for k in (0, 1) for c in (0, 1, 2)]
+    st.close()
+    assert (tmp_path / "s").is_dir()        # caller-provided: kept
+
+    owned = statestore.MmapShardStore(chunk_size=4)
+    owned.initialize(_row_tree(), 10)
+    d = owned.dir
+    assert os.path.isdir(d)
+    owned.close()
+    assert not os.path.isdir(d)             # store-owned scratch: removed
+
+
+def test_mmap_offload_aux_preserves_population_views():
+    """offload_aux must leave parts/weights semantically identical
+    (read-only memory maps) — the bench's O(cohort)-RAM path."""
+    from repro.fl.population import Population
+    parts = nxc_partition(_DS.labels, 6, 2, 4, seed=1)
+    pop = Population.from_parts(parts)
+    w_before = np.array(pop.weights)
+    st = statestore.get("mmap", chunk_size=4)
+    pop.use_store(st)
+    assert isinstance(pop.parts, statestore.ShardIndices)
+    assert len(pop.parts) == 6
+    for i in range(6):
+        np.testing.assert_array_equal(np.sort(pop.parts[i]),
+                                      np.sort(parts[i]))
+    np.testing.assert_array_equal(np.asarray(pop.weights), w_before)
+    assert not np.asarray(pop.weights).flags.writeable
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# ShardIndices
+# ---------------------------------------------------------------------------
+
+
+def test_shard_indices_from_parts_round_trip():
+    parts = [np.array([3, 1]), np.array([], np.int64), np.array([0, 2, 4])]
+    si = statestore.ShardIndices.from_parts(parts)
+    assert len(si) == 3
+    np.testing.assert_array_equal(si.lengths(), [2, 0, 3])
+    for i, p in enumerate(parts):
+        np.testing.assert_array_equal(si[i], p)
+    np.testing.assert_array_equal(
+        np.concatenate(list(si)), np.concatenate(parts))
+    assert statestore.ShardIndices.from_parts(si) is si
+
+
+def test_shard_indices_striped_partitions_every_sample():
+    for n, p in [(30, 7), (5, 8), (100, 100), (3, 1)]:
+        si = statestore.ShardIndices.striped(n, p)
+        assert len(si) == p
+        allidx = np.sort(np.concatenate([si[i] for i in range(p)]))
+        np.testing.assert_array_equal(allidx, np.arange(n))
+        # round-robin: client i holds exactly the samples ≡ i (mod p)
+        for i in range(p):
+            assert (si[i] % p == i).all()
+
+
+# ---------------------------------------------------------------------------
+# AliasTable edge cases (distributional properties: test_properties.py)
+# ---------------------------------------------------------------------------
+
+
+def test_alias_table_validates_weights():
+    with pytest.raises(ValueError, match="1-D"):
+        statestore.AliasTable(np.ones((2, 2)))
+    with pytest.raises(ValueError, match="non-negative"):
+        statestore.AliasTable(np.array([1.0, -0.5]))
+    with pytest.raises(ValueError, match="finite"):
+        statestore.AliasTable(np.array([1.0, np.inf]))
+    with pytest.raises(ValueError, match="zero"):
+        statestore.AliasTable(np.zeros(4))
+
+
+def test_alias_table_exact_column_mass():
+    """The alias decomposition is EXACT: summing each column's kept and
+    redirected mass recovers w/sum(w) to float precision — including
+    through zero-weight columns whose mass was redistributed."""
+    rng = np.random.default_rng(7)
+    w = rng.random(257) * (rng.random(257) > 0.3)
+    t = statestore.AliasTable(w)
+    mass = np.zeros(len(w))
+    np.add.at(mass, np.arange(len(w)), t.prob / len(w))
+    np.add.at(mass, t.alias, (1.0 - t.prob) / len(w))
+    np.testing.assert_allclose(mass, w / w.sum(), atol=1e-12)
+    assert (t.prob[w == 0] == 0).all()
+
+
+def test_alias_table_never_draws_zero_weight():
+    t = statestore.AliasTable(np.array([0.0, 1.0, 2.0, 0.0, 3.0]))
+    d = t.draw(np.random.default_rng(0), 5000)
+    assert not np.isin(d, [0, 3]).any()
+    s = t.sample_without_replacement(np.random.default_rng(1), 3)
+    np.testing.assert_array_equal(s, [1, 2, 4])
+
+
+def test_alias_table_rejects_overdrawn_cohort():
+    t = statestore.AliasTable(np.array([0.0, 1.0, 2.0]))
+    assert t.n_nonzero == 2
+    with pytest.raises(ValueError, match="distinct"):
+        t.sample_without_replacement(np.random.default_rng(0), 3)
+
+
+# ---------------------------------------------------------------------------
+# The tentpole pin: store equivalence through run_federated
+# ---------------------------------------------------------------------------
+
+
+def _history_sig(h):
+    return json.dumps({
+        "acc": [float(a) for a in h["acc"]],
+        "per_class": [np.asarray(r).tolist() for r in h["per_class_acc"]],
+        "participants": [np.asarray(p).tolist()
+                         for p in h["participants"]]})
+
+
+@pytest.mark.parametrize("method,sampler,cohort", [
+    ("scaffold", "uniform", 4),      # per-client control variates
+    ("fedavgm", "weighted", 4),      # server state + alias-table sampling
+    ("fedavg", "round_robin", 3),    # stateless control
+])
+def test_stores_bit_identical_histories(method, sampler, cohort):
+    """The tentpole acceptance pin: a run through the mmap store must be
+    BIT-IDENTICAL to the in-memory run — same accuracies, same per-class
+    rows, same sampled cohorts, same final params."""
+    parts = nxc_partition(_DS.labels, 6, 2, 4, seed=1)
+    task = cnn_task(_plain_cfg())
+    runs = {}
+    for store in ("memory", "mmap"):
+        runs[store] = run_federated(
+            task, _fl(method, store, cohort_size=cohort, sampler=sampler),
+            parts, _get_batch, _TEST_BATCHES)
+    assert _history_sig(runs["memory"]) == _history_sig(runs["mmap"])
+    for a, b in zip(
+            jax.tree_util.tree_leaves(runs["memory"]["final_params"]),
+            jax.tree_util.tree_leaves(runs["mmap"]["final_params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stores_bit_identical_fed2_presence_rows():
+    """fed2 with presence-weighted pairing gathers (cohort, G) presence
+    rows from the population each round — through the mmap store those
+    come off a read-only memory map and must not change the run."""
+    cfg = vgg9.reduced(n_classes=4, fed2_groups=2, decouple=1, norm="gn")
+    from repro.core.grouping import GroupSpec
+    parts = nxc_partition(_DS.labels, 6, 2, 4, seed=1)
+    counts = np.stack([np.bincount(_DS.labels[p], minlength=4)
+                       for p in parts])
+    spec = GroupSpec.contiguous(2, 4)
+    task = cnn_task(cfg)
+    runs = {}
+    for store in ("memory", "mmap"):
+        runs[store] = run_federated(
+            task, _fl("fed2", store, cohort_size=4, sampler="uniform"),
+            parts, _get_batch, _TEST_BATCHES,
+            class_counts=counts, group_spec=spec)
+    assert _history_sig(runs["memory"]) == _history_sig(runs["mmap"])
+
+
+def test_scenario_spec_validates_store():
+    from repro.fl import scenarios
+    with pytest.raises(ValueError, match="store"):
+        scenarios.ScenarioSpec(name="x", summary="s", protocol="iid",
+                               method="fedavg", store="nope")
