@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-claims smoke smoke-scenario scenarios bench-infra \
 	bench-cohort bench-population bench-eval bench-tiers bench-async \
-	dryrun-fl check-drift
+	bench-robust dryrun-fl check-drift
 
 # the tier-1 gate (ROADMAP.md)
 test:
@@ -73,6 +73,11 @@ bench-tiers:
 # client latencies (fl/async_engine.py, DESIGN.md §12)
 bench-async:
 	$(PY) benchmarks/flbench.py bench_async
+
+# robust-fusion rounds/sec vs the plain weighted mean at cohort 8/32 —
+# the overhead of the breakdown guarantee (fl/robust.py, DESIGN.md §14)
+bench-robust:
+	$(PY) benchmarks/flbench.py bench_robust
 
 bench-infra:
 	REPRO_BENCH_SET=infra $(PY) -m benchmarks.run

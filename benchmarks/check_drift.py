@@ -19,6 +19,15 @@ Policy per field (``FIELDS``):
     (``--rtol-temp``, default 10% — XLA's buffer-assignment temp total
     wobbles with scheduling decisions the PR didn't make).
 
+Wall-clock budget row (non-blocking): a committed baseline may declare
+``max_wall_s`` — a generous ceiling on the case's lower+compile wall
+clock (fl_dryrun stamps one automatically at 4x the measured wall,
+floored at 10s). A fresh record whose ``wall_s`` (fallback:
+``lower_s + compile_s``) exceeds the committed budget prints a
+``[WARN]`` line but never fails the gate: wall clock is machine-bound
+noise, so it can flag a pathological compile-time regression without
+ever going red on a slow CI runner.
+
 A fresh record with no committed baseline fails (commit the new
 baseline). A committed record the fresh run didn't produce is skipped
 ONLY when its mesh tag (the ``_<mesh>.json`` suffix) appears in no
@@ -110,13 +119,14 @@ def compare_dirs(fresh_dir: str, committed_dir: str, *,
     """Returns {"drift": [(file, field, reason)], "missing_baseline":
     [fresh-only files], "lost": [committed records of a mesh the fresh
     run covered but didn't produce — shrunk matrix, fails], "skipped":
-    [committed-only files of uncovered meshes], "compared": n}."""
+    [committed-only files of uncovered meshes], "warn": [(file, reason)
+    non-blocking wall-budget breaches], "compared": n}."""
     fresh = {os.path.basename(p): p
              for p in glob.glob(os.path.join(fresh_dir, pattern))}
     committed = {os.path.basename(p): p
                  for p in glob.glob(os.path.join(committed_dir, pattern))}
     out = {"drift": [], "missing_baseline": [], "lost": [], "skipped": [],
-           "compared": 0}
+           "warn": [], "compared": 0}
     for name in sorted(fresh):
         if name not in committed:
             out["missing_baseline"].append(name)
@@ -131,6 +141,19 @@ def compare_dirs(fresh_dir: str, committed_dir: str, *,
                               policy, rtol, rtol_temp)
             if reason is not None:
                 out["drift"].append((name, dotted, reason))
+        # wall-clock budget: advisory only — wall is machine-bound noise,
+        # so a breach WARNs (flagging compile-time pathologies) but never
+        # fails the gate
+        budget = old.get("max_wall_s")
+        if isinstance(budget, (int, float)):
+            wall = new.get("wall_s")
+            if not isinstance(wall, (int, float)):
+                wall = (new.get("lower_s", 0) or 0) + \
+                       (new.get("compile_s", 0) or 0)
+            if wall > budget:
+                out["warn"].append(
+                    (name, f"wall {wall:.1f}s exceeds the declared "
+                           f"max_wall_s budget {budget:.0f}s"))
     fresh_meshes = {_mesh_tag(n) for n in fresh}
     for name in sorted(set(committed) - set(fresh)):
         # a committed-only record of a mesh the fresh run covered means
@@ -163,6 +186,9 @@ def main(argv=None) -> int:
     for name in res["skipped"]:
         print(f"[skip] {name}: not in the fresh set (pod-mesh baseline; "
               "regenerate via `make dryrun-fl`)")
+    for name, reason in res["warn"]:
+        print(f"[WARN] {name}: {reason} (non-blocking: wall clock never "
+              "fails the gate)")
     print(f"compared {res['compared']} records")
 
     bad = False

@@ -589,16 +589,73 @@ def bench_async(*, population=8, cohort_size=4, buffer_k=2,
     return rec
 
 
+ROBUST_RULES = ("mean", "coordinate_median", "trimmed_mean(0.2)")
+
+
+def bench_robust(*, cohorts=(8, 32), rounds=None, steps_per_epoch=4,
+                 batch=16, method="fedavg") -> list:
+    """Steady-state rounds/sec of robust fusion vs the plain weighted
+    mean (fl/robust.py, DESIGN.md §14), same data/partition/net per
+    cohort width. Reducing rules replace fusion's O(n) affine sum with a
+    per-coordinate argsort over the client axis — O(n log n) per
+    parameter and no Pallas fast path — so the ``overhead_vs_mean``
+    column is the price of the breakdown guarantee, and it grows with
+    the cohort. The attack path is OFF here: poisoning changes which
+    values flow, not the lowered program's cost."""
+    import jax
+    from repro.fl.engine import make_round_engine
+
+    rounds = rounds or (4 if QUICK else 10)
+    recs = []
+    for cohort in cohorts:
+        batches, weights = _engine_fixture(cohort, steps_per_epoch, batch)
+        base_rps = None
+        for rule in ROBUST_RULES:
+            cfg = model_cfg("vgg9", method)
+            fl = FLConfig(population=cohort, rounds=rounds, local_epochs=1,
+                          steps_per_epoch=steps_per_epoch,
+                          batch_size=batch, lr=0.008, momentum=0.9,
+                          method=method, seed=0,
+                          robust=None if rule == "mean" else rule)
+            task = cnn_task(cfg)
+            gp = task.init_fn(jax.random.PRNGKey(0))
+            engine = make_round_engine(task, fl, gp)
+            state = engine.init_state(gp)
+            state, gp = engine.run_round(state, gp, batches,
+                                         weights=weights)     # compile
+            jax.block_until_ready(gp)
+            t0 = time.time()
+            for _ in range(rounds):
+                state, gp = engine.run_round(state, gp, batches,
+                                             weights=weights)
+            jax.block_until_ready(gp)
+            dt = time.time() - t0
+            rps = round(rounds / dt, 3)
+            if rule == "mean":
+                base_rps = rps
+            recs.append({"cohort_size": cohort, "method": method,
+                         "robust": rule, "rounds": rounds,
+                         "rounds_per_s": rps,
+                         "us_per_round": round(1e6 * dt / rounds),
+                         "overhead_vs_mean": round(base_rps / rps, 3)})
+    os.makedirs(ARTIFACTS_PERF, exist_ok=True)
+    with open(os.path.join(ARTIFACTS_PERF, "flbench_robust.json"),
+              "w") as f:
+        json.dump(recs, f, indent=1)
+    return recs
+
+
 BENCHES = {"bench_engine": None, "bench_methods": None,
            "bench_cohort": None, "bench_eval": None,
-           "bench_tiers": None, "bench_async": None}  # CLI subcommands
+           "bench_tiers": None, "bench_async": None,
+           "bench_robust": None}  # CLI subcommands
 
 
 def main(argv=None):
     import sys
     chosen = (argv if argv is not None else sys.argv[1:]) or \
         ["bench_engine", "bench_methods", "bench_cohort", "bench_eval",
-         "bench_tiers", "bench_async"]
+         "bench_tiers", "bench_async", "bench_robust"]
     bad = [c for c in chosen if c not in BENCHES]
     if bad:
         raise SystemExit(f"unknown bench {bad}; available: "
@@ -637,6 +694,12 @@ def main(argv=None):
               f"sim_speedup_to_target={r['sim_speedup_to_target']:.2f}x,"
               f"target_acc={r['target_acc']},"
               f"max_staleness={r['max_staleness']}")
+    if "bench_robust" in chosen:
+        for r in bench_robust():
+            print(f"fl_robust_c{r['cohort_size']}_{r['robust']},"
+                  f"{r['us_per_round']},"
+                  f"rounds_per_s={r['rounds_per_s']},"
+                  f"overhead_vs_mean={r['overhead_vs_mean']}x")
 
 
 if __name__ == "__main__":

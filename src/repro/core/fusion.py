@@ -57,11 +57,19 @@ class GroupAxis:
 
 
 def fedavg(stacked: PyTree, weights=None, *, use_kernel: bool = False,
-           bm: int = 1024) -> PyTree:
+           bm: int = 1024, robust=None) -> PyTree:
     """Coordinate-based averaging (Eq. 1). stacked leaves: (N, ...).
 
     use_kernel=True: stream every leaf through the Pallas
-    ``paired_fusion_kernel`` (one fused weighted-mean pass per leaf)."""
+    ``paired_fusion_kernel`` (one fused weighted-mean pass per leaf).
+    robust: a reducing RobustRule (fl/robust.py, DESIGN.md §14) replaces
+    the weighted-mean reduction per leaf (the sort-based statistic has no
+    kernel fast path, so use_kernel is ignored)."""
+    if robust is not None:
+        n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        w = _norm_weights(weights, n)
+        return jax.tree_util.tree_map(lambda p: robust.reduce(p, w),
+                                      stacked)
     if use_kernel:
         n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
         return _kernel_fuse(stacked, None, _norm_weights(weights, n), bm=bm)
@@ -140,7 +148,8 @@ def _permute_groups(leaf, ga: GroupAxis, perm):
 
 def paired_average(stacked: PyTree, group_axes: PyTree, perms=None,
                    weights=None, group_weights=None, *,
-                   use_kernel: bool = False, bm: int = 1024) -> PyTree:
+                   use_kernel: bool = False, bm: int = 1024,
+                   robust=None) -> PyTree:
     """Feature paired averaging (Eq. 19).
 
     group_axes: pytree matching ``stacked`` with ``GroupAxis`` or ``None``
@@ -157,7 +166,14 @@ def paired_average(stacked: PyTree, group_axes: PyTree, perms=None,
     fast path (pairing permutations are applied as a cheap gather first;
     identity under the structural pre-alignment). The tree_map path below
     stays the reference/fallback.
+    robust: a reducing RobustRule (fl/robust.py, DESIGN.md §14) replaces
+    every reduction; grouped leaves under presence weighting reduce PER
+    GROUP COLUMN with that column's weights (the rule renormalizes the
+    column internally, so trimmed mass renormalizes within each group —
+    alignment preserved). No kernel fast path: use_kernel is ignored.
     """
+    if robust is not None:
+        use_kernel = False
     if perms is not None:
         perms = jnp.asarray(perms)
     gw = None
@@ -193,10 +209,27 @@ def paired_average(stacked: PyTree, group_axes: PyTree, perms=None,
             shp = (stacked_leaf.shape[:ax] + (g, blk) +
                    stacked_leaf.shape[ax + 1:])
             xg = stacked_leaf.reshape(shp)
+            if robust is not None:
+                # per-group-column robust reduction: group gi fuses with
+                # ITS presence column (already column-normalized above),
+                # so the rule's internal renormalization stays within
+                # the group — alignment preserved
+                blocks = [
+                    robust.reduce(
+                        jax.lax.index_in_dim(xg, gi, axis=ax,
+                                             keepdims=False),
+                        gw[:, gi])
+                    for gi in range(g)
+                ]
+                return jnp.stack(blocks, axis=ax - 1).reshape(
+                    stacked_leaf.shape[1:])
             wshape = [1] * xg.ndim
             wshape[0], wshape[ax] = gw.shape[0], g
             wb = gw.reshape(wshape).astype(xg.dtype)
             return jnp.sum(xg * wb, axis=0).reshape(stacked_leaf.shape[1:])
+        if robust is not None:
+            n = stacked_leaf.shape[0]
+            return robust.reduce(stacked_leaf, _norm_weights(weights, n))
         if weights is None:
             return jnp.mean(stacked_leaf, axis=0)
         w = jnp.asarray(weights, jnp.float32)

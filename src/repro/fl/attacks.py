@@ -1,0 +1,276 @@
+"""Byzantine client attacks (DESIGN.md §14).
+
+An attack is an ``Attack`` subclass registered by name, resolved from a
+spec string through the same parser family as tiers/staleness/latency
+(``parse_attack("sign_flip(4)")``). Two injection points, chosen by the
+attack's capability flags:
+
+- ``data_poisoning`` (label_flip): the attack corrupts a malicious
+  client's BATCHES before they reach the engine — equivalent to
+  poisoning the shard at partition time because shards are disjoint and
+  the eval set stays clean. Applied on the host in
+  ``runtime._pack_client_batches``, so the jitted round is the honest
+  program bit-for-bit.
+- ``model_poisoning`` (sign_flip / scaled_update / gauss_noise): the
+  attack transforms a malicious client's post-local-phase params INSIDE
+  the vmapped local phase, selected by a traced per-cohort
+  malicious-presence row (fl/engine.py) — ``where(mal > 0, poisoned,
+  honest)``, so a cohort that samples zero attackers computes the honest
+  round bit-for-bit.
+
+Attacker ASSIGNMENT is population metadata, exactly like capacity tiers
+(fl/capacity.py): ``assign_attackers`` flags a seed-deterministic subset
+of logical client ids on ``Population.malicious``; sampling, cohort
+tiling and gather/scatter index it by client id, so the flagged set is
+stable under every participation pattern by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# dedicated rng stream offsets so attacker assignment / noise draws never
+# collide with data partitioning (seed), tier assignment (seed + 7331) or
+# any jax key the round already folds
+ASSIGN_SEED_OFFSET = 14407
+NOISE_KEY_OFFSET = 9091
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackSpec:
+    """A parsed attack spec: registry name + optional strength parameter
+    (``None`` = the attack class's default)."""
+    name: str
+    param: float | None = None
+
+    def build(self) -> "Attack":
+        return get(self.name, self.param)
+
+    def describe(self) -> str:
+        if self.param is None:
+            return self.name
+        return f"{self.name}({self.param:g})"
+
+
+class Attack:
+    """Byzantine behavior base class."""
+
+    name: str = ""
+    summary: str = ""          # one line for the README attack table
+    data_poisoning = False     # corrupts batches on the host
+    model_poisoning = False    # transforms params inside the vmapped phase
+    needs_rng = False          # poison_update consumes the per-client key
+    default_param: float | None = None
+
+    def __init__(self, param: float | None = None):
+        if param is not None and self.default_param is None:
+            raise ValueError(f"{self.name} takes no parameter; "
+                             f"got {self.name}({param:g})")
+        self.param = self.default_param if param is None else float(param)
+
+    def poison_batch(self, batch, n_classes: int):
+        """Corrupt one host-side step batch (data_poisoning only)."""
+        raise NotImplementedError
+
+    def poison_update(self, params, global_params, mal, key):
+        """ONE client's post-local-phase params -> poisoned params when
+        ``mal > 0`` (traced scalar), the honest params bit-for-bit when
+        ``mal == 0``. Vmapped over the cohort axis by the engine; ``key``
+        is this slot's fold_in of the round key (needs_rng only)."""
+        raise NotImplementedError
+
+    def _select(self, mal, poisoned, honest):
+        """where(mal > 0, poisoned, honest) over the tree — an exact
+        elementwise select, so zero-attacker cohorts stay bit-identical
+        to the honest program."""
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.where(mal > 0, a.astype(b.dtype), b),
+            poisoned, honest)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type[Attack]] = {}
+
+
+def register(cls: type[Attack]) -> type[Attack]:
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available() -> tuple[str, ...]:
+    """All registered attack names, sorted (the canonical enumeration for
+    CLIs and the README attack table)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str, param: float | None = None) -> Attack:
+    """Resolve a fresh attack instance by registry name."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown attack {name!r}; available: "
+            f"{', '.join(available())}") from None
+    return cls(param)
+
+
+_SPEC_RE = re.compile(
+    r"^\s*([a-z_]+)\s*(?:\(\s*([-+0-9.eE]+)\s*\))?\s*$")
+
+
+def parse_attack(spec: str) -> AttackSpec:
+    """``"label_flip"`` / ``"sign_flip(4)"`` -> AttackSpec (validated
+    against the registry; building checks the parameter)."""
+    m = _SPEC_RE.match(spec or "")
+    if not m:
+        raise ValueError(
+            f"bad attack spec {spec!r}; expected NAME or NAME(PARAM), "
+            f"e.g. 'label_flip' or 'sign_flip(4)'")
+    name, param = m.group(1), m.group(2)
+    out = AttackSpec(name, None if param is None else float(param))
+    out.build()                 # validates name + parameter eagerly
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attacker assignment (population metadata, like capacity tiers)
+# ---------------------------------------------------------------------------
+
+
+def attacker_count(fraction, population: int) -> int:
+    """``attack_fraction`` semantics: a value >= 1 is an explicit count,
+    a value in (0, 1) is a population fraction (rounded). At least one
+    honest client must remain."""
+    f = float(fraction)
+    if f >= 1.0:
+        if f != int(f):
+            raise ValueError(
+                f"attack_fraction >= 1 means an explicit attacker count "
+                f"and must be an integer; got {fraction!r}")
+        count = int(f)
+    elif f > 0.0:
+        count = int(round(f * population))
+        if count == 0:
+            raise ValueError(
+                f"attack_fraction={f:g} flags zero clients at "
+                f"population={population}; use an explicit count "
+                f"(attack_fraction >= 1) to flag at least one")
+    else:
+        raise ValueError(
+            f"attack_fraction must be positive (fraction in (0,1) or an "
+            f"explicit count >= 1); got {fraction!r}")
+    if count >= population:
+        raise ValueError(
+            f"attack_fraction={fraction!r} flags {count} of "
+            f"{population} clients; at least one honest client must "
+            "remain")
+    return count
+
+
+def assign_attackers(fraction, population: int, *, seed: int) -> np.ndarray:
+    """Seed-deterministic (population,) bool attacker mask, indexed by
+    logical client id — a dedicated rng stream (like TierPlan.from_mix),
+    so attacker identity never shifts when sampling/partition draws
+    change."""
+    count = attacker_count(fraction, population)
+    rng = np.random.default_rng(seed + ASSIGN_SEED_OFFSET)
+    mask = np.zeros(population, bool)
+    mask[rng.permutation(population)[:count]] = True
+    return mask
+
+
+def round_key(seed: int, round_idx: int):
+    """The per-round attack key: one dedicated stream folded by round
+    index, split per cohort slot inside the engine."""
+    return jax.random.fold_in(
+        jax.random.PRNGKey(seed + NOISE_KEY_OFFSET), round_idx)
+
+
+# ---------------------------------------------------------------------------
+# Attacks
+# ---------------------------------------------------------------------------
+
+
+@register
+class LabelFlip(Attack):
+    """Deterministic label flipping: a malicious client trains every
+    sample against ``n_classes - 1 - label`` (the canonical pairwise
+    flip). Pure data poisoning — the device round is the honest program."""
+    name = "label_flip"
+    summary = "malicious shards train on n-1-y flipped labels"
+    data_poisoning = True
+
+    def poison_batch(self, batch, n_classes: int):
+        labels = batch["labels"]
+        return {**batch,
+                "labels": (n_classes - 1 - labels).astype(labels.dtype)}
+
+
+@register
+class SignFlip(Attack):
+    """Sign-flipping model poisoning: the malicious update moves the
+    global AGAINST the honest direction, ``g - s*(y - g)`` (s =
+    strength; s=1 is the classic mirrored update)."""
+    name = "sign_flip"
+    summary = "malicious update mirrored through the global, g - s*(y-g)"
+    model_poisoning = True
+    default_param = 1.0
+
+    def poison_update(self, params, global_params, mal, key):
+        s = jnp.float32(self.param)
+        poisoned = jax.tree_util.tree_map(
+            lambda y, g: g - s.astype(y.dtype) * (y - g.astype(y.dtype)),
+            params, global_params)
+        return self._select(mal, poisoned, params)
+
+
+@register
+class ScaledUpdate(Attack):
+    """Update-scaling model poisoning: the malicious delta is amplified
+    ``s``x, ``g + s*(y - g)`` — the boosting attack robust rules with a
+    bounded breakdown point must survive."""
+    name = "scaled_update"
+    summary = "malicious delta amplified s-fold, g + s*(y-g)"
+    model_poisoning = True
+    default_param = 10.0
+
+    def poison_update(self, params, global_params, mal, key):
+        s = jnp.float32(self.param)
+        poisoned = jax.tree_util.tree_map(
+            lambda y, g: g.astype(y.dtype) +
+            s.astype(y.dtype) * (y - g.astype(y.dtype)),
+            params, global_params)
+        return self._select(mal, poisoned, params)
+
+
+@register
+class GaussNoise(Attack):
+    """Additive Gaussian noise poisoning: ``y + sigma * eps`` with a
+    per-(round, slot, leaf) key, so noise is seed-deterministic and
+    independent across rounds."""
+    name = "gauss_noise"
+    summary = "malicious update + sigma-scaled gaussian noise"
+    model_poisoning = True
+    needs_rng = True
+    default_param = 1.0
+
+    def poison_update(self, params, global_params, mal, key):
+        sigma = jnp.float32(self.param)
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        noisy = [
+            l + sigma.astype(l.dtype) * jax.random.normal(
+                jax.random.fold_in(key, i), l.shape, l.dtype)
+            for i, l in enumerate(leaves)
+        ]
+        poisoned = jax.tree_util.tree_unflatten(treedef, noisy)
+        return self._select(mal, poisoned, params)

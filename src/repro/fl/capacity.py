@@ -619,4 +619,4 @@ def lower_tier_tile(task, cfg, mesh, batch_elems: dict, *, width: float,
                                  sharding=NamedSharding(mesh, P()))
     with mesh:
         return engine.tile_fn.lower((), (), gspecs, bspecs, wspec,
-                                    None), model
+                                    None, None), model

@@ -59,7 +59,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import fusion as fusion_lib
+from repro.fl import attacks as attacks_lib
 from repro.fl import methods as methods_lib
+from repro.fl import robust as robust_lib
 from repro.fl.methods import FedMethod, MethodContext
 from repro.optim.optimizers import Optimizer
 
@@ -136,7 +138,16 @@ class RoundEngine:
     host (matching is not a device program).
 
     Cohort tiling (participants > cohort_size) drives ``run_tile`` per
-    tile and ``finish_round`` once — see fl/runtime.py."""
+    tile and ``finish_round`` once — see fl/runtime.py.
+
+    Adversarial runs (DESIGN.md §14): when cfg.attack names a
+    model-poisoning attack, ``attack`` holds its instance and
+    ``malicious`` — a (cohort, malicious-presence row, per-round key)
+    pair — is an extra traced round argument; passing None (the only
+    option for honest configs) lowers the identical honest program.
+    ``robust`` holds the REDUCING robust rule when one is active (the
+    tiled-round refusal in fl/runtime.py reads it; pre-only rules stay
+    affine and don't set it)."""
     cohort_size: int
     mesh: Any
     method: FedMethod
@@ -148,10 +159,19 @@ class RoundEngine:
     init_server_state: Callable
     init_client_states: Callable
     _host_fuse: Callable | None = None
+    attack: Any = None
+    robust: Any = None
 
     @staticmethod
     def _w32(w):
         return None if w is None else jnp.asarray(w, jnp.float32)
+
+    @staticmethod
+    def _mal(mal):
+        if mal is None:
+            return None
+        row, key = mal
+        return jnp.asarray(row, jnp.float32), key
 
     def init_client_row(self, global_params: PyTree) -> PyTree:
         """ONE client's round-0 state tree as HOST (numpy) arrays — the
@@ -179,23 +199,25 @@ class RoundEngine:
                 np.broadcast_to(l[None], (population,) + l.shape)), one)
 
     def run_round(self, state: PyTree, global_params: PyTree,
-                  batches: PyTree, weights=None,
-                  group_weights=None) -> tuple:
+                  batches: PyTree, weights=None, group_weights=None,
+                  malicious=None) -> tuple:
         state, out = self.round_fn(state, global_params, batches,
                                    self._w32(weights),
-                                   self._w32(group_weights))
+                                   self._w32(group_weights),
+                                   self._mal(malicious))
         if self._host_fuse is not None:
             out = self.host_fuse(out, weights)
         return state, out
 
     def run_tile(self, client_states: PyTree, server_state: PyTree,
                  global_params: PyTree, batches: PyTree, weights=None,
-                 group_weights=None) -> tuple:
+                 group_weights=None, malicious=None) -> tuple:
         """One cohort tile of a tiled round: local phase + fuse only.
         Returns (new_client_states, fuse_out)."""
         return self.tile_fn(client_states, server_state, global_params,
                             batches, self._w32(weights),
-                            self._w32(group_weights))
+                            self._w32(group_weights),
+                            self._mal(malicious))
 
     def finish_round(self, server_state: PyTree, global_params: PyTree,
                      fused: PyTree) -> tuple:
@@ -238,12 +260,33 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
     ga = None
     if meth.uses_groups and task.group_axes_fn is not None:
         ga = task.group_axes_fn(params_like)
+    # adversarial knobs (DESIGN.md §14), resolved from cfg so every
+    # construction path (run_federated, lower_round, direct drives) gets
+    # them: only MODEL-poisoning attacks enter the traced round (data
+    # poisoning happens at batch assembly); identity-shortcut robust
+    # parameters (trimmed_mean(0)/norm_clip(inf)) drop the rule so the
+    # compiled round stays bit-identical to plain fusion
+    attack = None
+    if getattr(cfg, "attack", None):
+        atk = attacks_lib.parse_attack(cfg.attack).build()
+        if atk.model_poisoning:
+            attack = atk
+    rule = None
+    if getattr(cfg, "robust", None):
+        rule = robust_lib.parse_robust(cfg.robust)
+        robust_lib.check_robust_support(meth, rule)
+        if not rule.active:
+            rule = None
+        elif use_kernel and rule.reduces:
+            use_kernel = False   # sort-based reductions have no kernel path
     ctx = MethodContext(task=task, cfg=cfg, population=cfg.population,
                         cohort_size=n,
                         local_steps=cfg.local_epochs * cfg.steps_per_epoch,
                         opt=opt, weights=None, raw_weights=None,
                         group_axes=ga, group_weights=None,
-                        use_kernel=use_kernel)
+                        use_kernel=use_kernel,
+                        robust=rule if (rule is not None and rule.reduces)
+                        else None)
     meth.check(ctx)
 
     def init_server_state(global_params):
@@ -258,10 +301,13 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
                 "clients": init_client_states(global_params, n)}
 
     def local_and_fuse(clients_state, server_state, global_params, batches,
-                       ctx_r):
+                       ctx_r, malicious):
         """The shared cohort-tile body: broadcast -> vmapped local phase
         -> device fuse (used by both round_fn and tile_fn so the two
-        compile the identical per-tile program)."""
+        compile the identical per-tile program). ``malicious`` is the
+        traced (presence row, round key) pair when a model-poisoning
+        attack is configured, else None — an empty pytree, so honest
+        configs lower the identical program."""
         stacked = fusion_lib.broadcast_global(global_params, n)
         if mesh is not None:
             constrain = lambda t: jax.lax.with_sharding_constraint(  # noqa: E731
@@ -269,19 +315,35 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
                     lambda l: _client_sharding(mesh, l.ndim), t))
             stacked = constrain(stacked)
             clients_state = constrain(clients_state)
-        stacked, new_clients = jax.vmap(
-            lambda p, b, cs: meth.client_update(
-                p, b, global_params, cs, server_state, ctx_r),
-            in_axes=(0, 0, 0))(stacked, batches, clients_state)
+        if attack is not None and malicious is not None:
+            row, key = malicious
+            keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+                key, jnp.arange(n))
+
+            def one(p, b, cs, m, k):
+                p2, cs2 = meth.client_update(p, b, global_params, cs,
+                                             server_state, ctx_r)
+                return attack.poison_update(p2, global_params, m, k), cs2
+
+            stacked, new_clients = jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(
+                stacked, batches, clients_state, row, keys)
+        else:
+            stacked, new_clients = jax.vmap(
+                lambda p, b, cs: meth.client_update(
+                    p, b, global_params, cs, server_state, ctx_r),
+                in_axes=(0, 0, 0))(stacked, batches, clients_state)
+        if rule is not None and rule.has_pre:
+            stacked = rule.pre(stacked, global_params)
         fused = meth.fuse(stacked, global_params, ctx_r)
         return new_clients, fused
 
-    def round_fn(state, global_params, batches, weights, group_weights):
+    def round_fn(state, global_params, batches, weights, group_weights,
+                 malicious):
         ctx_r = dataclasses.replace(ctx, weights=weights,
                                     group_weights=group_weights)
         new_clients, fused = local_and_fuse(
             state["clients"], state["server"], global_params, batches,
-            ctx_r)
+            ctx_r, malicious)
         if meth.host_fusion:
             return {"server": state["server"],
                     "clients": new_clients}, fused
@@ -291,11 +353,11 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
         return {"server": new_server, "clients": new_clients}, new_global
 
     def tile_fn(clients_state, server_state, global_params, batches,
-                weights, group_weights):
+                weights, group_weights, malicious):
         ctx_r = dataclasses.replace(ctx, weights=weights,
                                     group_weights=group_weights)
         return local_and_fuse(clients_state, server_state, global_params,
-                              batches, ctx_r)
+                              batches, ctx_r, malicious)
 
     def server_fn(server_state, global_params, fused):
         # tiled rounds: the server step sees no client states (methods
@@ -318,7 +380,10 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
                        init_state=init_state,
                        init_server_state=init_server_state,
                        init_client_states=init_client_states,
-                       _host_fuse=host_fuse)
+                       _host_fuse=host_fuse,
+                       attack=attack,
+                       robust=rule if (rule is not None and rule.reduces)
+                       else None)
 
 
 # ---------------------------------------------------------------------------
@@ -338,8 +403,12 @@ def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int,
     ``ctx.local_steps`` — which method numerics read (scaffold's K*lr,
     fednova's tau) — equals the ``local_steps`` the lowered round scans.
     The per-round cohort weights lower as a replicated (cohort_size,)
-    f32 argument. Returns the jax ``Lowered`` for
-    ``round_fn(state_specs, global_specs, batch_specs, w_spec, None)``.
+    f32 argument; a model-poisoning cfg.attack adds the replicated
+    malicious-presence row + round-key specs (honest configs pass None —
+    an empty pytree, so their lowering is unchanged). Returns the jax
+    ``Lowered`` for
+    ``round_fn(state_specs, global_specs, batch_specs, w_spec, None,
+    mal_specs)``.
     """
     cfg = dataclasses.replace(cfg, local_epochs=1,
                               steps_per_epoch=local_steps)
@@ -370,8 +439,16 @@ def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int,
     }
     wspec = jax.ShapeDtypeStruct((n,), jnp.float32,
                                  sharding=NamedSharding(mesh, P()))
+    mspec = None
+    if engine.attack is not None:
+        kshape = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+        mspec = (jax.ShapeDtypeStruct((n,), jnp.float32,
+                                      sharding=NamedSharding(mesh, P())),
+                 jax.ShapeDtypeStruct(kshape.shape, kshape.dtype,
+                                      sharding=NamedSharding(mesh, P())))
     with mesh:      # jax 0.4.x: Mesh is the context manager
-        return engine.round_fn.lower(sspecs, gspecs, bspecs, wspec, None)
+        return engine.round_fn.lower(sspecs, gspecs, bspecs, wspec, None,
+                                     mspec)
 
 
 def stacked_param_bytes(task, n_clients: int) -> int:

@@ -77,6 +77,7 @@ class MethodContext:
     group_axes: PyTree | None
     group_weights: jnp.ndarray | None
     use_kernel: bool
+    robust: Any = None         # reducing RobustRule (fl/robust.py) or None
 
 
 class FedMethod:
@@ -122,6 +123,23 @@ class FedMethod:
         eligibility; override only for a method whose fuse breaks the
         buffered form in a way these flags don't capture."""
         return self.tier_fusion
+
+    @property
+    def robust_fusion(self) -> bool:
+        """Whether the robust fusion rules of fl/robust.py may wrap this
+        method (DESIGN.md §14): a rule replaces (reducing rules) or
+        precedes (norm_clip) the cross-client reduction INSIDE
+        core/fusion.py, so the method's fuse must route through
+        ``fedavg``/``paired_average`` — true for every device-fused
+        method (fedavg/fedprox/fed2 and the server-step methods reduce
+        stacked params; fednova reduces normalized deltas, so a rule
+        sees the deltas — the standard robust-aggregation form; scaffold
+        reduces stacked params, its control-variate update is
+        fusion-independent). host_fusion (fedma) ends the device round
+        at the stacked params and has no coordinate reduction to
+        replace. Override only for a method whose fuse bypasses
+        core/fusion.py in a way this flag doesn't capture."""
+        return not self.host_fusion
 
     def local_opt(self, cfg):
         """The optimizer driving the local phase. Default: the config's
@@ -205,7 +223,8 @@ class FedMethod:
     def fuse(self, stacked, global_params, ctx: MethodContext) -> PyTree:
         """Device-side aggregation of the stacked client params."""
         return fusion_lib.fedavg(stacked, ctx.weights,
-                                 use_kernel=ctx.use_kernel)
+                                 use_kernel=ctx.use_kernel,
+                                 robust=ctx.robust)
 
     def host_fuse(self, device_out, ctx: MethodContext) -> PyTree:
         """Host-side completion (only when ``host_fusion``)."""
@@ -286,7 +305,8 @@ class Fed2(FedMethod):
         return fusion_lib.paired_average(stacked, ctx.group_axes,
                                          weights=ctx.weights,
                                          group_weights=ctx.group_weights,
-                                         use_kernel=ctx.use_kernel)
+                                         use_kernel=ctx.use_kernel,
+                                         robust=ctx.robust)
 
 
 @register
@@ -402,7 +422,8 @@ class FedNova(FedMethod):
             lambda y, x: (x[None] - y) / tau.astype(y.dtype),
             stacked, global_params)
         d = fusion_lib.fedavg(deltas, ctx.weights,
-                              use_kernel=ctx.use_kernel)
+                              use_kernel=ctx.use_kernel,
+                              robust=ctx.robust)
         tau_eff = tau            # all clients run local_steps steps
         return jax.tree_util.tree_map(
             lambda x, dl: x - tau_eff.astype(x.dtype) * dl,

@@ -58,12 +58,22 @@ class Population:
     tiers: optional (P,) int tier index per client — the capacity class
     each logical client trains (fl/capacity.py ``TierPlan.assignment``);
     None for homogeneous runs.
+    malicious: optional (P,) bool attacker mask, indexed by logical
+    client id (fl/attacks.py ``assign_attackers``, seed-deterministic
+    like tier assignment) — carried here exactly like ``tiers`` so the
+    flagged set is stable under sampling, cohort tiling and
+    gather/scatter; None for honest runs.
+    poison: optional host-side batch hook ``batch -> batch`` applied to
+    MALICIOUS clients' step batches at packing time (data-poisoning
+    attacks, e.g. label_flip); None otherwise.
     """
     parts: Any
     weights: np.ndarray
     group_weights: np.ndarray | None = None
     store: Any = None
     tiers: np.ndarray | None = None
+    malicious: np.ndarray | None = None
+    poison: Any = None
 
     def __post_init__(self):
         if self.store is None:

@@ -1,0 +1,276 @@
+"""Composable robust fusion rules (DESIGN.md §14).
+
+A robust rule wraps an affine ``FedMethod.fuse`` without the method
+knowing: ``core/fusion.py``'s ``fedavg``/``paired_average`` accept
+``robust=rule`` and route their cross-client reduction through it. Two
+hooks, chosen by the rule's capability flags:
+
+- ``reduces`` (coordinate_median, trimmed_mean(beta>0)): the rule
+  REPLACES the weighted-mean reduction over the stacked client axis with
+  a weighted-quantile statistic, applied per coordinate. For fed2's
+  presence-weighted grouped leaves the reduction runs PER GROUP COLUMN
+  with that column's normalized weights — alignment is preserved and the
+  trimmed mass renormalizes within each group, never across groups.
+- ``has_pre`` (norm_clip(tau)): the rule transforms the stacked client
+  tree BEFORE the plain fuse — each client's whole-tree update delta is
+  L2-clipped to ``tau``, then the method's own (affine) fusion runs
+  unchanged. Pre-only rules therefore stay affine and keep cohort-tiling
+  exactness; reducing rules are NOT affine (a median of per-tile medians
+  is not the round's median) and refuse tiled rounds in
+  ``runtime.run_sampled_round``.
+
+Degenerate parameters are IDENTITY SHORTCUTS, resolved python-side:
+``trimmed_mean(0)`` is exactly the weighted mean and ``norm_clip(inf)``
+clips nothing, so both leave the engine's compiled round BIT-IDENTICAL
+to plain fusion (the zero-attacker identity pins in
+tests/test_adversarial.py).
+
+Eligibility follows the ``tier_fusion``/``async_eligible`` pattern:
+``FedMethod.robust_fusion`` declares whether a method's fuse routes its
+reduction through core/fusion.py at all (host-side matching does not),
+and ``check_robust_support`` is THE single copy of the refusal —
+FLConfig validation and the engine both call it.
+"""
+from __future__ import annotations
+
+import math
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.methods import FedMethod
+
+
+def check_robust_support(method: FedMethod, rule=None) -> None:
+    """Raise unless ``method`` can carry robust fusion — THE single copy
+    of the eligibility rule (FLConfig validation and make_round_engine
+    both call it)."""
+    if not method.robust_fusion:
+        what = rule.describe() if rule is not None else "robust fusion"
+        raise ValueError(
+            f"{method.name} does not support {what} "
+            "(FedMethod.robust_fusion): robust rules replace or wrap the "
+            "cross-client reduction inside core/fusion.py, which "
+            "host-fusion methods never run — their round ends at the "
+            "stacked params and fuses on the host (matching has no "
+            "coordinate-reduction form)")
+
+
+class RobustRule:
+    """Robust fusion rule base class."""
+
+    name: str = ""
+    summary: str = ""          # one line for the README robust table
+    reduces = False            # replaces the weighted-mean reduction
+    has_pre = False            # transforms the stacked tree before fuse
+
+    @property
+    def active(self) -> bool:
+        """False for identity-shortcut parameters (trimmed_mean(0),
+        norm_clip(inf)): the engine drops the rule entirely, compiling
+        the bit-identical plain round."""
+        return self.reduces or self.has_pre
+
+    def describe(self) -> str:
+        return self.name
+
+    def reduce(self, x, w):
+        """(N, ...) stacked leaf + (N,) nonnegative weights -> fused
+        leaf (reducing rules only). Weights are renormalized inside, so
+        per-group columns need no caller-side renormalization."""
+        raise NotImplementedError
+
+    def pre(self, stacked, global_params):
+        """Transform the stacked client tree before the plain fuse
+        (pre rules only)."""
+        return stacked
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type[RobustRule]] = {}
+
+
+def register(cls: type[RobustRule]) -> type[RobustRule]:
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available() -> tuple[str, ...]:
+    """All registered rule names, sorted (the canonical enumeration for
+    CLIs and the README robust table)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str, param: float | None = None) -> RobustRule:
+    """Resolve a fresh rule instance by registry name."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown robust rule {name!r}; available: "
+            f"{', '.join(available())}") from None
+    return cls() if param is None else cls(param)
+
+
+_SPEC_RE = re.compile(
+    r"^\s*([a-z_]+)\s*(?:\(\s*([-+0-9.eE]+|inf)\s*\))?\s*$")
+
+
+def parse_robust(spec: str) -> RobustRule:
+    """``"coordinate_median"`` / ``"trimmed_mean(0.2)"`` /
+    ``"norm_clip(inf)"`` -> a validated rule instance."""
+    m = _SPEC_RE.match(spec or "")
+    if not m:
+        raise ValueError(
+            f"bad robust spec {spec!r}; expected NAME or NAME(PARAM), "
+            f"e.g. 'coordinate_median' or 'trimmed_mean(0.2)'")
+    name, param = m.group(1), m.group(2)
+    return get(name, None if param is None else float(param))
+
+
+# ---------------------------------------------------------------------------
+# Weighted robust statistics (the reductions rules share)
+# ---------------------------------------------------------------------------
+
+
+def _sorted_cumweights(x, w):
+    """Per-coordinate sort of the client axis: (N, m) values + (N,)
+    weights -> (sorted values, per-coordinate sorted weights, their
+    cumsum). Weights are normalized to sum 1 first."""
+    w = jnp.asarray(w, jnp.float32)
+    w = w / jnp.sum(w)
+    order = jnp.argsort(x, axis=0)
+    xs = jnp.take_along_axis(x, order, axis=0)
+    ws = w[order]
+    return xs, ws, jnp.cumsum(ws, axis=0)
+
+
+def weighted_median(x, w):
+    """Lower weighted median over axis 0 (per coordinate): the smallest
+    value whose cumulative weight reaches half the total. Always an
+    INPUT value, which is what gives the breakdown guarantee — attacker
+    mass < 1/2 can never select a poisoned coordinate past the honest
+    envelope."""
+    n = x.shape[0]
+    flat = x.reshape(n, -1).astype(jnp.float32)
+    xs, _, cw = _sorted_cumweights(flat, w)
+    idx = jnp.argmax(cw >= 0.5 * cw[-1:], axis=0)
+    out = jnp.take_along_axis(xs, idx[None], axis=0)[0]
+    return out.reshape(x.shape[1:]).astype(x.dtype)
+
+
+def trimmed_mean(x, w, beta: float):
+    """Weighted beta-trimmed mean over axis 0 (per coordinate): drop the
+    lowest and highest ``beta`` weight mass, average the surviving mass
+    renormalized by 1 - 2*beta. Each client's effective weight is its
+    cumulative-interval overlap with [beta, 1-beta], so partial trims at
+    the boundaries are exact and beta=0 recovers the weighted mean."""
+    n = x.shape[0]
+    flat = x.reshape(n, -1).astype(jnp.float32)
+    xs, ws, cw = _sorted_cumweights(flat, w)
+    lo, hi = float(beta), 1.0 - float(beta)
+    eff = jnp.clip(jnp.minimum(cw, hi) - jnp.maximum(cw - ws, lo),
+                   0.0, None)
+    out = jnp.sum(xs * eff, axis=0) / (hi - lo)
+    return out.reshape(x.shape[1:]).astype(x.dtype)
+
+
+def clip_deltas(stacked, global_params, tau: float):
+    """Per-client whole-tree L2 clip of the update delta: client i's
+    delta y_i - g is scaled by min(1, tau/||y_i - g||_2), computed over
+    ALL leaves jointly (a per-leaf clip would let an attacker spend the
+    budget per leaf)."""
+    deltas = jax.tree_util.tree_map(
+        lambda y, g: y - g[None].astype(y.dtype), stacked, global_params)
+    sq = sum(
+        jnp.sum(jnp.square(d.astype(jnp.float32)).reshape(d.shape[0], -1),
+                axis=1)
+        for d in jax.tree_util.tree_leaves(deltas))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, jnp.float32(tau) / jnp.maximum(norm, 1e-12))
+
+    def unclip(g, d):
+        s = scale.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
+        return g[None].astype(d.dtype) + d * s
+
+    return jax.tree_util.tree_map(unclip, global_params, deltas)
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+@register
+class CoordinateMedian(RobustRule):
+    """Coordinate-wise (lower) weighted median — breakdown point 1/2:
+    no single arbitrarily-scaled update can move any coordinate past the
+    honest envelope."""
+    name = "coordinate_median"
+    summary = "per-coordinate weighted median, breakdown point 1/2"
+    reduces = True
+
+    def __init__(self, param: float | None = None):
+        if param is not None:
+            raise ValueError(
+                f"coordinate_median takes no parameter; got "
+                f"coordinate_median({param:g})")
+
+    def reduce(self, x, w):
+        return weighted_median(x, w)
+
+
+@register
+class TrimmedMean(RobustRule):
+    """Weighted beta-trimmed mean — drops ``beta`` weight mass from each
+    tail per coordinate, renormalizing the survivors by 1 - 2*beta.
+    ``trimmed_mean(0)`` is the weighted mean EXACTLY (identity shortcut:
+    the engine compiles the plain round)."""
+    name = "trimmed_mean"
+    summary = "per-coordinate weighted mean after trimming beta per tail"
+
+    def __init__(self, beta: float = 0.1):
+        beta = float(beta)
+        if not 0.0 <= beta < 0.5:
+            raise ValueError(
+                f"trimmed_mean beta must be in [0, 0.5); got {beta:g} "
+                "(0.5 would trim all mass; use coordinate_median)")
+        self.beta = beta
+        self.reduces = beta > 0.0
+
+    def describe(self) -> str:
+        return f"trimmed_mean({self.beta:g})"
+
+    def reduce(self, x, w):
+        return trimmed_mean(x, w, self.beta)
+
+
+@register
+class NormClip(RobustRule):
+    """Whole-tree update-norm clipping: client i's delta is scaled by
+    min(1, tau/||delta_i||) before the method's own (affine) fusion —
+    bounds any single client's displacement by tau without touching the
+    reduction, so cohort tiling stays exact. ``norm_clip(inf)`` clips
+    nothing (identity shortcut: the engine compiles the plain round)."""
+    name = "norm_clip"
+    summary = "per-client whole-tree delta L2-clipped to tau before fuse"
+
+    def __init__(self, tau: float = 10.0):
+        tau = float(tau)
+        if not tau > 0.0:
+            raise ValueError(f"norm_clip tau must be > 0; got {tau:g}")
+        self.tau = tau
+        self.has_pre = math.isfinite(tau)
+
+    def describe(self) -> str:
+        return f"norm_clip({self.tau:g})"
+
+    def pre(self, stacked, global_params):
+        return clip_deltas(stacked, global_params, self.tau)

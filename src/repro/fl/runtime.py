@@ -103,6 +103,17 @@ class FLConfig:
     mode: str = "sync"
     buffer_k: int | None = None
     staleness: str = "constant"
+    # adversarial federation (fl/attacks.py + fl/robust.py, DESIGN.md
+    # §14): attack names a registered byzantine behavior
+    # ("label_flip" | "sign_flip(s)" | "scaled_update(s)" |
+    # "gauss_noise(sigma)"), attack_fraction flags that share of the
+    # population as seed-deterministic attackers (>= 1 = explicit
+    # count); robust names a fusion rule ("coordinate_median" |
+    # "trimmed_mean(beta)" | "norm_clip(tau)") wrapping the method's
+    # fuse. None/"" = honest run / plain fusion.
+    attack: str | None = None
+    attack_fraction: float = 0.0
+    robust: str | None = None
 
     def __post_init__(self):
         if self.method not in methods_lib.available():
@@ -178,6 +189,44 @@ class FLConfig:
                 raise ValueError(
                     "FLConfig.staleness is only meaningful with "
                     "mode='async'; leave it 'constant' for sync rounds")
+        if not self.attack:
+            object.__setattr__(self, "attack", None)
+            if self.attack_fraction:
+                raise ValueError(
+                    f"FLConfig.attack_fraction="
+                    f"{self.attack_fraction!r} without attack: name the "
+                    "byzantine behavior (FLConfig.attack, e.g. "
+                    "'sign_flip') or drop the fraction")
+        else:
+            from repro.fl import attacks as attacks_lib
+            attacks_lib.parse_attack(self.attack)
+            attacks_lib.attacker_count(self.attack_fraction,
+                                       self.population)
+        if not self.robust:
+            object.__setattr__(self, "robust", None)
+        else:
+            from repro.fl import robust as robust_lib
+            rule = robust_lib.parse_robust(self.robust)
+            robust_lib.check_robust_support(methods_lib.get(self.method),
+                                            rule)
+        if self.attack or self.robust:
+            what = "attack" if self.attack else "robust"
+            if self.tiers is not None:
+                raise ValueError(
+                    f"FLConfig.{what} and tiers are mutually exclusive "
+                    "for now: tiered rounds fuse width-sliced sub-model "
+                    "tiles (DESIGN.md §11), where neither the "
+                    "malicious-presence row nor a cross-tile robust "
+                    "reduction is defined; drop the tiers or the "
+                    "adversarial knobs")
+            if self.mode == "async":
+                raise ValueError(
+                    f"FLConfig.{what} and mode='async' are mutually "
+                    "exclusive for now: a fusion event mixes updates "
+                    "from different global versions, so the "
+                    "per-round malicious row / robust reduction "
+                    "(DESIGN.md §14) has no buffered form yet; run "
+                    "mode='sync'")
 
 
 @dataclasses.dataclass
@@ -198,12 +247,18 @@ class FLTask:
     tier_fn: Callable[[float], Any] | None = None
 
 
-def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
+def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng,
+                         poison_fns=None):
     """Per cohort tile: (C, n_steps, B, ...) batch arrays for the given
     clients' shards, sampling with replacement where a shard is short
-    (empty shards index sample 0)."""
+    (empty shards index sample 0). poison_fns: optional per-client list
+    of ``batch -> batch`` hooks (None entries = honest) — data-poisoning
+    attacks (DESIGN.md §14) corrupt a malicious client's batches HERE,
+    after the rng draw, so the packing rng stream is bit-identical to
+    the honest run."""
     per_client = []
-    for idx in parts:
+    for ci, idx in enumerate(parts):
+        hook = poison_fns[ci] if poison_fns is not None else None
         steps = []
         for _ in range(n_steps):
             if len(idx) == 0:
@@ -211,7 +266,8 @@ def _pack_client_batches(parts, get_batch, n_steps, batch_size, rng):
             else:
                 sel = rng.choice(idx, size=batch_size,
                                  replace=len(idx) < batch_size)
-            steps.append(get_batch(sel))
+            b = get_batch(sel)
+            steps.append(b if hook is None else hook(b))
         per_client.append(jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *steps))
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_client)
@@ -238,20 +294,44 @@ def pad_tile_inputs(pop: Population, tids, width: int, get_batch, n_steps,
         gw = pop.group_weights[padded]
         gw = (gw if gw_cols is None else gw[:, :gw_cols]).copy()
         gw[n_real:] = 0.0
+    pois = None
+    if pop.poison is not None and pop.malicious is not None:
+        pois = [pop.poison if pop.malicious[i] else None for i in padded]
     batches = _pack_client_batches([pop.parts[i] for i in padded],
-                                   get_batch, n_steps, batch_size, rng)
+                                   get_batch, n_steps, batch_size, rng,
+                                   poison_fns=pois)
     return padded, w, gw, batches
+
+
+def _malicious_inputs(engine, pop: Population, padded, n_real, cfg,
+                      round_idx):
+    """The engine's traced malicious argument for one tile: the sampled
+    slots' attacker flags (pad rows forced honest — they carry zero
+    weight anyway) + the per-round key. None for honest engines."""
+    if engine.attack is None:
+        return None
+    if pop.malicious is None:
+        raise ValueError(
+            "cfg.attack is set but the Population carries no attacker "
+            "mask; build the run through run_federated (it assigns "
+            "attackers seed-deterministically via "
+            "attacks.assign_attackers) or set pop.malicious")
+    from repro.fl import attacks as attacks_lib
+    row = pop.malicious[np.asarray(padded)].astype(np.float32)
+    row[n_real:] = 0.0
+    return row, attacks_lib.round_key(cfg.seed, round_idx)
 
 
 def run_sampled_round(engine, pop: Population, method, server_state,
                       global_params, ids, get_batch, n_steps, cfg, rng,
-                      uniform_weights: bool = False):
+                      uniform_weights: bool = False, round_idx: int = 0):
     """Execute one round for participant ids — a single engine invocation
     when the cohort holds them all, cohort tiling otherwise. Returns
     (server_state, new_global); per-client state is gathered/scattered on
     ``pop`` in place. uniform_weights: every participant contributes
     equally to fusion (samplers whose draw probability already encodes
-    shard size — ``ClientSampler.fusion_weights``)."""
+    shard size — ``ClientSampler.fusion_weights``). round_idx seeds the
+    per-round attack key (model-poisoning runs, DESIGN.md §14)."""
     C = engine.cohort_size
     ids = np.asarray(ids, np.int64)
 
@@ -262,6 +342,7 @@ def run_sampled_round(engine, pop: Population, method, server_state,
 
     if len(ids) == C:
         _, w, gw, batches = tile_inputs(ids)
+        mal = _malicious_inputs(engine, pop, ids, C, cfg, round_idx)
         # whole population in one cohort in natural order: client state
         # needs no slot remapping, so keep it device-resident across
         # rounds (no host round-trip, no per-round sync) — the
@@ -274,7 +355,8 @@ def run_sampled_round(engine, pop: Population, method, server_state,
                  "clients": (pop.clients if whole
                              else pop.gather(method, ids))}
         state, new_global = engine.run_round(state, global_params, batches,
-                                             weights=w, group_weights=gw)
+                                             weights=w, group_weights=gw,
+                                             malicious=mal)
         if whole:
             pop.clients = state["clients"]
         else:
@@ -308,17 +390,37 @@ def run_sampled_round(engine, pop: Population, method, server_state,
                if len(ids) > C else
                "use a sampler that fills the cohort, or lower "
                "cohort_size to the participant count"))
+    if engine.robust is not None:
+        # reducing robust rules (coordinate_median, trimmed_mean) are
+        # NOT affine in the weighted client mean: a median of per-tile
+        # medians is not the round's median, so the tile-accumulation
+        # identity below doesn't hold (norm_clip is a pre-transform and
+        # tiles exactly — make_round_engine leaves engine.robust None
+        # for it)
+        raise ValueError(
+            f"robust rule {engine.robust.describe()!r} reduces over the "
+            "full cohort and has no exact tiled form (the weighted "
+            f"quantile is not affine); got {len(ids)} participants for "
+            f"cohort_size={C} — "
+            + ("raise cohort_size to hold all participants or use a "
+               "cohort-sized sampler (uniform/weighted/round_robin)"
+               if len(ids) > C else
+               "use a sampler that fills the cohort, or lower "
+               "cohort_size to the participant count"))
     acc, w_acc = None, 0.0
     stacked_tiles = []              # host_fusion: stacked params per tile
     for t0 in range(0, len(ids), C):
         tids = ids[t0:t0 + C]
         n_real = len(tids)
         padded, w, gw, batches = tile_inputs(tids)
+        mal = _malicious_inputs(engine, pop, padded, n_real, cfg,
+                                round_idx)
         cstate = pop.gather(method, padded)
         new_cstate, fuse_out = engine.run_tile(cstate, server_state,
                                                global_params, batches,
                                                weights=w,
-                                               group_weights=gw)
+                                               group_weights=gw,
+                                               malicious=mal)
         pop.scatter(method, tids, jax.tree_util.tree_map(
             lambda a: a[:n_real], new_cstate))
         if method.host_fusion:
@@ -446,6 +548,21 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     from repro.fl import statestore as statestore_lib
     pop = Population.from_parts(parts, group_weights=gw)
     pop.use_store(statestore_lib.get(cfg.store, chunk_size=cfg.chunk_size))
+    if cfg.attack is not None:
+        from repro.fl import attacks as attacks_lib
+        atk = attacks_lib.parse_attack(cfg.attack).build()
+        pop.malicious = attacks_lib.assign_attackers(
+            cfg.attack_fraction, cfg.population, seed=cfg.seed)
+        if atk.data_poisoning:
+            if task.n_classes is None:
+                raise ValueError(
+                    f"attack {cfg.attack!r} poisons labels and needs "
+                    "task.n_classes (defined for classification tasks; "
+                    "LM tasks have no flip target) — use a "
+                    "model-poisoning attack (sign_flip/scaled_update/"
+                    "gauss_noise) instead")
+            pop.poison = (lambda b, _a=atk, _n=task.n_classes:
+                          _a.poison_batch(b, _n))
     tiered = None
     if cfg.tiers is not None:
         from repro.fl import capacity as capacity_lib
@@ -526,7 +643,8 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
         else:
             server_state, global_params = run_sampled_round(
                 engine, pop, method, server_state, global_params, ids,
-                get_batch, n_steps, cfg, rng, uniform_weights=uniform_w)
+                get_batch, n_steps, cfg, rng, uniform_weights=uniform_w,
+                round_idx=r)
         if checkpoint_dir and ((r + 1) % checkpoint_every == 0
                                or r == cfg.rounds - 1):
             from repro.checkpoint import io as ckpt_io

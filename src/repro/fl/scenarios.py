@@ -67,6 +67,12 @@ class ScenarioSpec:
     DESIGN.md §13) — "memory" stacks all P client rows in RAM, "mmap"
     keeps them in ``chunk_size``-row on-disk shards so server memory is
     O(cohort). Either store yields bit-identical histories.
+    attack/attack_fraction/robust: adversarial federation
+    (fl/attacks.py + fl/robust.py, DESIGN.md §14) — attack names a
+    registered byzantine behavior and attack_fraction the
+    seed-deterministic attacker share (>= 1 = explicit count); robust
+    names the fusion rule wrapping the method's fuse. Empty = honest
+    run / plain fusion.
     """
     name: str
     summary: str
@@ -99,6 +105,9 @@ class ScenarioSpec:
     buffer_k: int | None = None
     staleness: str = "constant"
     latency: str = "zero"
+    attack: str = ""
+    attack_fraction: float = 0.0
+    robust: str = ""
 
     def __post_init__(self):
         if self.protocol not in PROTOCOLS:
@@ -141,6 +150,21 @@ class ScenarioSpec:
                 "ScenarioSpec.latency is only meaningful with "
                 "mode='async' (the sync round barrier just waits out "
                 "the slowest client); keep it 'zero' for sync scenarios")
+        if self.attack:
+            from repro.fl import attacks as attacks_lib
+            attacks_lib.parse_attack(self.attack)
+            attacks_lib.attacker_count(self.attack_fraction,
+                                       self.population)
+        elif self.attack_fraction:
+            raise ValueError(
+                f"ScenarioSpec.attack_fraction={self.attack_fraction!r} "
+                "without attack: name the byzantine behavior or drop "
+                "the fraction")
+        if self.robust:
+            from repro.fl import robust as robust_lib
+            rule = robust_lib.parse_robust(self.robust)
+            robust_lib.check_robust_support(methods_lib.get(self.method),
+                                            rule)
 
     def override(self, **kw) -> "ScenarioSpec":
         """A copy with fields replaced (smoke runs: fewer rounds, less
@@ -200,7 +224,10 @@ class ScenarioSpec:
                         seed=self.seed, eval_batch=self.eval_batch,
                         store=self.store, chunk_size=self.chunk_size,
                         tiers=self.tiers or None, mode=self.mode,
-                        buffer_k=self.buffer_k, staleness=self.staleness)
+                        buffer_k=self.buffer_k, staleness=self.staleness,
+                        attack=self.attack or None,
+                        attack_fraction=self.attack_fraction,
+                        robust=self.robust or None)
 
     def group_spec(self) -> GroupSpec:
         """The canonical class->group map the per-group accuracy rows
@@ -228,6 +255,9 @@ class ConvergenceRecord:
     sim_time: list = dataclasses.field(default_factory=list)
     #                       # per-event simulated clock under the spec's
     #                       # latency trace ([] for sync runs)
+    attack: str = ""        # byzantine behavior ("" = honest run)
+    attack_fraction: float = 0.0
+    robust: str = ""        # robust fusion rule ("" = plain fusion)
 
     @property
     def final_acc(self) -> float:
@@ -302,7 +332,9 @@ def run_scenario(spec: ScenarioSpec, *, mesh=None, use_kernel=None,
         wall_total=round(float(h["wall_total"]), 3),
         tiers=[[w, c] for w, c in spec.tiers] if spec.tiers else [],
         mode=spec.mode,
-        sim_time=[round(float(t), 4) for t in h.get("sim_time", [])])
+        sim_time=[round(float(t), 4) for t in h.get("sim_time", [])],
+        attack=spec.attack, attack_fraction=spec.attack_fraction,
+        robust=spec.robust)
     if outdir is not None:
         rec.save(outdir)
     return rec
@@ -421,3 +453,39 @@ register(ScenarioSpec(
     mode="async", cohort_size=4, sampler="uniform", buffer_k=2,
     staleness="polynomial(0.5)", latency="pareto(1.5)", rounds=15,
     summary="N x C skew, buffered-async Fed2 under Pareto stragglers"))
+
+# -- adversarial federation (fl/attacks.py + fl/robust.py, DESIGN.md §14) ---
+# Byzantine-client regime on the N x C protocol at population 10 so a
+# 20% attacker fraction is exactly 2 seed-deterministic clients
+# (assign_attackers, seed + 14407 stream). label_flip poisons the data
+# (graceful degradation: plain fusion survives, just worse); sign_flip(4)
+# poisons the update aggressively enough that plain averaging diverges —
+# the regime where robust fusion (trimmed_mean) must restore learning.
+# Claims compare final accuracies at the pinned seed
+# (tests/test_paper_claims.py), never absolute robustness numbers.
+register(ScenarioSpec(
+    name="nxc2_fedavg_flip20", protocol="nxc", method="fedavg",
+    population=10, attack="label_flip", attack_fraction=0.2,
+    summary="N x C skew, 20% label-flip data poisoning, plain FedAvg"))
+register(ScenarioSpec(
+    name="nxc2_fed2_flip20", protocol="nxc", method="fed2",
+    population=10, attack="label_flip", attack_fraction=0.2,
+    summary="N x C skew, 20% label-flip data poisoning, plain Fed2"))
+register(ScenarioSpec(
+    name="nxc2_fedavg_signflip20", protocol="nxc", method="fedavg",
+    population=10, attack="sign_flip(4)", attack_fraction=0.2,
+    summary="N x C skew, 20% sign-flip model poisoning, plain FedAvg"))
+register(ScenarioSpec(
+    name="nxc2_fed2_signflip20", protocol="nxc", method="fed2",
+    population=10, attack="sign_flip(4)", attack_fraction=0.2,
+    summary="N x C skew, 20% sign-flip model poisoning, plain Fed2"))
+register(ScenarioSpec(
+    name="nxc2_fedavg_signflip20_trim", protocol="nxc", method="fedavg",
+    population=10, attack="sign_flip(4)", attack_fraction=0.2,
+    robust="trimmed_mean(0.25)",
+    summary="20% sign-flip vs FedAvg + 0.25-trimmed-mean robust fusion"))
+register(ScenarioSpec(
+    name="nxc2_fed2_signflip20_trim", protocol="nxc", method="fed2",
+    population=10, attack="sign_flip(4)", attack_fraction=0.2,
+    robust="trimmed_mean(0.25)",
+    summary="20% sign-flip vs Fed2 + per-group 0.25-trimmed-mean fusion"))

@@ -22,7 +22,12 @@ against the committed baselines by the CI perf-drift gate
 (benchmarks/check_drift.py, ``make check-drift``). A capacity-tier tile
 matrix (fl/capacity.py, DESIGN.md §11) lowers alongside by default
 (``--no-tiers`` to skip): per-tier sub-model programs with their uplink
-bytes.
+bytes. So does an adversarial robust-fusion matrix (``ROBUST_MATRIX``,
+``--no-robust-events`` to skip): one sign_flip-poisoned round per
+fusion family under a reducing robust rule (fl/attacks.py +
+fl/robust.py, DESIGN.md §14). Every ok record also stamps its measured
+``wall_s`` plus an auto ``max_wall_s`` budget for check_drift's
+non-blocking wall-clock WARN row.
 
   PYTHONPATH=src python -m repro.launch.fl_dryrun [--clients 16]
   PYTHONPATH=src python -m repro.launch.fl_dryrun --mesh host   # CPU smoke
@@ -49,6 +54,7 @@ if __name__ == "__main__" and _mesh_kind(sys.argv) == "pod":
 
 import argparse      # noqa: E402
 import json          # noqa: E402
+import math          # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
 
@@ -163,6 +169,7 @@ def run_one(method: str, family: str, mesh, mesh_name: str, *,
             # (full participation over a larger population tiles this)
             host_gather_bytes=(stacked_param_bytes(task, rec["cohort_size"])
                                if meth.host_fusion else 0))
+        _stamp_wall(rec, t_lower, t_compile)
         if verbose:
             busy = {k: round(v["bytes"] / 2**20, 1)
                     for k, v in colls.items() if v["count"]}
@@ -177,6 +184,17 @@ def run_one(method: str, family: str, mesh, mesh_name: str, *,
             print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
     _write(outdir, tag, rec)
     return rec
+
+
+def _stamp_wall(rec, t_lower, t_compile):
+    """Measured lower+compile wall plus an auto budget (4x, floored at
+    10s) for check_drift's NON-BLOCKING wall row: a fresh run past the
+    committed ``max_wall_s`` prints [WARN], never red — wall clock is
+    machine noise, but a 4x blowout usually means a compile-time
+    pathology worth a look."""
+    wall = t_lower + t_compile
+    rec["wall_s"] = round(wall, 2)
+    rec["max_wall_s"] = max(10.0, float(math.ceil(4 * wall)))
 
 
 def _write(outdir, tag, rec):
@@ -236,6 +254,7 @@ def run_tier_one(method: str, width: float, mesh, mesh_name: str, *,
                     "argument_bytes": mem.argument_size_in_bytes,
                     "output_bytes": mem.output_size_in_bytes},
             collectives=collective_bytes(compiled.as_text()))
+        _stamp_wall(rec, t_lower, t_compile)
         if verbose:
             print(f"[ok]   {tag}: lower {t_lower:.1f}s compile "
                   f"{t_compile:.1f}s uplink {rec['uplink_frac']:.3f}x "
@@ -304,6 +323,7 @@ def run_async_one(method: str, family: str, mesh, mesh_name: str, *,
                     "argument_bytes": mem.argument_size_in_bytes,
                     "output_bytes": mem.output_size_in_bytes},
             collectives=collective_bytes(compiled.as_text()))
+        _stamp_wall(rec, t_lower, t_compile)
         if verbose:
             busy = {k: round(v["bytes"] / 2**20, 1)
                     for k, v in rec["collectives"].items() if v["count"]}
@@ -335,6 +355,81 @@ def run_async_matrix(mesh, mesh_name: str, *, methods=("fedavg", "fed2"),
             for f in families for m in eligible]
 
 
+# adversarial placements (fl/attacks.py + fl/robust.py, DESIGN.md §14):
+# one REDUCING robust rule per fusion family — coordinate_median over
+# fedavg's flat average, per-group-column trimmed_mean over fed2's paired
+# average — each lowered WITH the traced sign_flip poison branch, so the
+# record pins the whole adversarial round program
+ROBUST_MATRIX = (("fedavg", "coordinate_median"),
+                 ("fed2", "trimmed_mean(0.2)"))
+
+
+def run_robust_one(method: str, rule: str, mesh, mesh_name: str, *,
+                   clients: int, local_steps: int, batch: int,
+                   outdir: str, verbose: bool = True) -> dict:
+    """Lower+compile ONE adversarial round (fl/attacks.py + fl/robust.py,
+    DESIGN.md §14): the vmapped local phase with the traced
+    malicious-presence branch (sign_flip update poisoning) fused by a
+    REDUCING robust rule instead of the plain weighted mean. Reducing
+    rules replace fusion's affine sum with per-coordinate weighted
+    quantiles (per group column for fed2) and force the collective path
+    (no Pallas fast path) — these records pin the lowering overhead the
+    robustness buys."""
+    rname = rule.split("(", 1)[0].strip()
+    tag = f"fl_robust_{method}_{rname}_{mesh_name}"
+    rec = {"kind": "fl_robust", "method": method, "family": "cnn",
+           "mesh": mesh_name, "population": clients,
+           "cohort_size": clients, "local_steps": local_steps,
+           "batch": batch, "attack": "sign_flip(4)", "robust": rule}
+    try:
+        kind = "host" if mesh_name == "1x1" else "pod"
+        task, arch = _cnn_case(method, kind)
+        fl = FLConfig(population=clients, method=method,
+                      attack="sign_flip(4)", attack_fraction=0.2,
+                      robust=rule)
+        t0 = time.time()
+        lowered = lower_round(task, fl, mesh,
+                              _batch_elems("cnn", batch, 0),
+                              local_steps=local_steps)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        colls = collective_bytes(compiled.as_text())
+        rec.update(
+            status="ok", arch=arch,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops=_flops(compiled),
+            use_kernel=False,   # reducing rules force the collective path
+            memory={"temp_bytes": mem.temp_size_in_bytes,
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes},
+            collectives=colls)
+        _stamp_wall(rec, t_lower, t_compile)
+        if verbose:
+            busy = {k: round(v["bytes"] / 2**20, 1)
+                    for k, v in colls.items() if v["count"]}
+            print(f"[ok]   {tag}: lower {t_lower:.1f}s compile "
+                  f"{t_compile:.1f}s collectives(MiB) {busy}")
+    except Exception as e:  # noqa: BLE001 — record, keep the matrix going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    _write(outdir, tag, rec)
+    return rec
+
+
+def run_robust_matrix(mesh, mesh_name: str, *, methods=("fedavg", "fed2"),
+                      clients: int, local_steps: int, batch: int,
+                      outdir: str, verbose: bool = True) -> list:
+    return [run_robust_one(m, rule, mesh, mesh_name, clients=clients,
+                           local_steps=local_steps, batch=batch,
+                           outdir=outdir, verbose=verbose)
+            for m, rule in ROBUST_MATRIX if m in methods]
+
+
 DEFAULT_OUT = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "..", "..",
     "benchmarks", "artifacts_perf"))      # cwd-independent, like flbench
@@ -345,7 +440,7 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                batch: int = 32, seq: int = 64, outdir: str = DEFAULT_OUT,
                cohort_size=None, sampler: str = "full",
                use_kernel=None, tiers: bool = True,
-               async_events: bool = True,
+               async_events: bool = True, robust_events: bool = True,
                verbose: bool = True) -> list:
     methods = methods_lib.available() if methods is None else methods
     bad = [m for m in methods if m not in methods_lib.available()] + \
@@ -379,6 +474,12 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                                  local_steps=local_steps, batch=batch,
                                  seq=seq, outdir=outdir,
                                  use_kernel=use_kernel, verbose=verbose)
+    if robust_events and "cnn" in families:
+        robust_methods = [m for m in ("fedavg", "fed2") if m in methods]
+        recs += run_robust_matrix(mesh, mesh_name, methods=robust_methods,
+                                  clients=clients, local_steps=local_steps,
+                                  batch=batch, outdir=outdir,
+                                  verbose=verbose)
     return recs
 
 
@@ -418,6 +519,13 @@ def main():
                     help="also lower the buffered-async fusion-event "
                          "matrix (async-eligible fedavg+fed2 x families; "
                          "fl/async_engine.py)")
+    ap.add_argument("--robust-events",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="also lower the adversarial robust-fusion round "
+                         "matrix (sign_flip poisoning + "
+                         "fedavg x coordinate_median / fed2 x "
+                         "trimmed_mean, cnn; fl/attacks.py + "
+                         "fl/robust.py)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
 
@@ -431,7 +539,8 @@ def main():
                       seq=args.seq, outdir=args.out,
                       cohort_size=args.cohort_size, sampler=args.sampler,
                       use_kernel=args.use_kernel, tiers=args.tiers,
-                      async_events=args.async_events)
+                      async_events=args.async_events,
+                      robust_events=args.robust_events)
     n_fail = sum(r["status"] == "error" for r in recs)
     print(f"done; {len(recs)} records, {n_fail} failures")
     raise SystemExit(1 if n_fail else 0)

@@ -19,6 +19,9 @@ Examples:
       --cohort-size 4 --sampler uniform --fed-mode async --buffer-k 2 \
       --staleness 'polynomial(0.5)' --latency 'pareto(1.5)'
                                                   # buffered-async
+  PYTHONPATH=src python -m repro.launch.train --mode fl --nodes 10 \
+      --attack 'sign_flip(4)' --attack-fraction 0.2 \
+      --robust 'trimmed_mean(0.25)'               # adversarial + robust
 """
 from __future__ import annotations
 
@@ -132,7 +135,10 @@ def run_fl(args):
                   method=args.method, seed=args.seed,
                   tiers=args.tiers or None, mode=args.fed_mode,
                   buffer_k=args.buffer_k, staleness=args.staleness,
-                  store=args.store, chunk_size=args.chunk_size)
+                  store=args.store, chunk_size=args.chunk_size,
+                  attack=args.attack or None,
+                  attack_fraction=args.attack_fraction,
+                  robust=args.robust or None)
     h = run_federated(cnn_task(cfg), fl, parts, get_batch, test_batches,
                       latency=args.latency, log=print)
     print("final acc:", h["acc"][-1])
@@ -140,8 +146,10 @@ def run_fl(args):
 
 
 def main():
+    from repro.fl import attacks as attacks_lib
     from repro.fl import methods as methods_lib
     from repro.fl import population as population_lib
+    from repro.fl import robust as robust_lib
     from repro.fl import statestore as statestore_lib
 
     ap = argparse.ArgumentParser()
@@ -196,6 +204,20 @@ def main():
     ap.add_argument("--latency", default="zero",
                     help="async: seed-deterministic client-latency trace "
                          "— 'zero', 'pareto(a)' or 'lognormal(sigma)'")
+    ap.add_argument("--attack", default="",
+                    help="fl mode: byzantine client behavior as "
+                         "name[(param)], e.g. label_flip or sign_flip(4) "
+                         "(fl/attacks.py registry: "
+                         + ", ".join(attacks_lib.available()) + ")")
+    ap.add_argument("--attack-fraction", type=float, default=0.0,
+                    help="fl mode: attacker share of the population in "
+                         "(0, 1), or an explicit count >= 1; assignment "
+                         "is seed-deterministic (requires --attack)")
+    ap.add_argument("--robust", default="",
+                    help="fl mode: robust fusion rule as name[(param)], "
+                         "e.g. coordinate_median or trimmed_mean(0.25) "
+                         "(fl/robust.py registry: "
+                         + ", ".join(robust_lib.available()) + ")")
     ap.add_argument("--classes-per-node", type=int, default=5)
     ap.add_argument("--dirichlet", type=float, default=0.0)
     ap.add_argument("--local-epochs", type=int, default=1)
@@ -225,6 +247,10 @@ def main():
                               or args.latency != "zero"):
         ap.error("--fed-mode/--buffer-k/--staleness/--latency are only "
                  "supported with --mode fl")
+    if args.mode != "fl" and (args.attack or args.attack_fraction
+                              or args.robust):
+        ap.error("--attack/--attack-fraction/--robust are only supported "
+                 "with --mode fl")
     (run_lm if args.mode == "lm" else run_fl)(args)
 
 

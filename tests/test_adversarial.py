@@ -1,0 +1,379 @@
+"""Adversarial federation (fl/attacks.py + fl/robust.py, DESIGN.md §14):
+attack/rule registries and spec parsing, seed-deterministic attacker
+assignment, poison math, the robust reductions against numpy references,
+the identity-shortcut BIT-IDENTITY pins (trimmed_mean(0) / norm_clip(inf)
+/ a zero-malicious cohort), and the eligibility refusals."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg9
+from repro.core import fusion as fusion_lib
+from repro.data.synthetic import make_image_dataset, nxc_partition
+from repro.fl import attacks as attacks_lib
+from repro.fl import methods as methods_lib
+from repro.fl import robust as robust_lib
+from repro.fl.engine import make_round_engine
+from repro.fl.runtime import (FLConfig, _pack_client_batches, cnn_task,
+                              run_federated)
+
+_DS = make_image_dataset(240, n_classes=10, seed=0, noise=0.8)
+_TEST = make_image_dataset(80, n_classes=10, seed=9, noise=0.8)
+_PARTS = nxc_partition(_DS.labels, 6, 5, 10, seed=0)
+
+
+def _get_batch(sel):
+    return {"images": jnp.asarray(_DS.images[sel]),
+            "labels": jnp.asarray(_DS.labels[sel])}
+
+
+_TEST_BATCHES = [{"images": jnp.asarray(_TEST.images),
+                  "labels": jnp.asarray(_TEST.labels)}]
+
+_GROUPED = vgg9.reduced()                              # G=5, decouple=3
+_PLAIN = vgg9.reduced(fed2_groups=0, norm="none")
+
+
+def _fl(method="fedavg", **kw):
+    return FLConfig(population=6, rounds=2, local_epochs=1,
+                    steps_per_epoch=2, batch_size=8, lr=0.02,
+                    momentum=0.9, method=method, seed=0, **kw)
+
+
+def _run(method="fedavg", **kw):
+    cfg = _GROUPED if methods_lib.get(method).uses_groups else _PLAIN
+    return run_federated(cnn_task(cfg), _fl(method, **kw), _PARTS,
+                         _get_batch, _TEST_BATCHES)
+
+
+_runs = {}
+
+
+def _final_params(label, **kw):
+    if label not in _runs:
+        _runs[label] = jax.tree_util.tree_leaves(
+            _run(**kw)["final_params"])
+    return _runs[label]
+
+
+# ---------------------------------------------------------------------------
+# Registries + spec parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_attack_specs_and_errors():
+    spec = attacks_lib.parse_attack("sign_flip(4)")
+    assert (spec.name, spec.param) == ("sign_flip", 4.0)
+    assert spec.describe() == "sign_flip(4)"
+    assert attacks_lib.parse_attack("label_flip").describe() == "label_flip"
+    with pytest.raises(ValueError, match="unknown attack"):
+        attacks_lib.parse_attack("nope")
+    with pytest.raises(ValueError, match="bad attack spec"):
+        attacks_lib.parse_attack("sign_flip(4")
+    with pytest.raises(ValueError, match="takes no parameter"):
+        attacks_lib.parse_attack("label_flip(2)")
+    assert set(attacks_lib.available()) >= {
+        "label_flip", "sign_flip", "scaled_update", "gauss_noise"}
+
+
+def test_parse_robust_specs_and_errors():
+    assert robust_lib.parse_robust("coordinate_median").reduces
+    assert robust_lib.parse_robust("trimmed_mean(0.2)").beta == 0.2
+    assert robust_lib.parse_robust("norm_clip(inf)").tau == float("inf")
+    with pytest.raises(ValueError, match="unknown robust rule"):
+        robust_lib.parse_robust("median_of_means")
+    with pytest.raises(ValueError, match=r"beta must be in \[0, 0.5\)"):
+        robust_lib.parse_robust("trimmed_mean(0.5)")
+    with pytest.raises(ValueError, match="tau must be > 0"):
+        robust_lib.parse_robust("norm_clip(0)")
+    with pytest.raises(ValueError, match="takes no parameter"):
+        robust_lib.parse_robust("coordinate_median(2)")
+
+
+def test_identity_shortcuts_report_inactive():
+    assert not robust_lib.parse_robust("trimmed_mean(0)").active
+    assert not robust_lib.parse_robust("norm_clip(inf)").active
+    assert robust_lib.parse_robust("trimmed_mean(0.1)").active
+    assert robust_lib.parse_robust("norm_clip(5)").active
+
+
+# ---------------------------------------------------------------------------
+# Attacker assignment (population metadata, like capacity tiers)
+# ---------------------------------------------------------------------------
+
+
+def test_attacker_count_semantics():
+    assert attacks_lib.attacker_count(0.2, 10) == 2
+    assert attacks_lib.attacker_count(3, 10) == 3
+    with pytest.raises(ValueError, match="zero clients"):
+        attacks_lib.attacker_count(0.01, 10)
+    with pytest.raises(ValueError, match="must be an integer"):
+        attacks_lib.attacker_count(2.5, 10)
+    with pytest.raises(ValueError, match="honest client must remain"):
+        attacks_lib.attacker_count(10, 10)
+    with pytest.raises(ValueError, match="must be positive"):
+        attacks_lib.attacker_count(0.0, 10)
+
+
+def test_assign_attackers_deterministic_and_sized():
+    a = attacks_lib.assign_attackers(0.2, 10, seed=0)
+    b = attacks_lib.assign_attackers(0.2, 10, seed=0)
+    np.testing.assert_array_equal(a, b)
+    assert a.sum() == 2 and a.dtype == bool and len(a) == 10
+    # a different seed draws from a different permutation stream
+    seen = {tuple(np.flatnonzero(
+        attacks_lib.assign_attackers(0.2, 10, seed=s))) for s in range(8)}
+    assert len(seen) > 1
+
+
+# ---------------------------------------------------------------------------
+# Poison math
+# ---------------------------------------------------------------------------
+
+
+def test_label_flip_poisons_batch_and_preserves_dtype():
+    atk = attacks_lib.get("label_flip")
+    batch = {"images": jnp.zeros((4, 2)),
+             "labels": jnp.asarray([0, 3, 9, 5], jnp.int32)}
+    out = atk.poison_batch(batch, 10)
+    np.testing.assert_array_equal(np.asarray(out["labels"]), [9, 6, 0, 4])
+    assert out["labels"].dtype == batch["labels"].dtype
+    assert out["images"] is batch["images"]       # only labels touched
+
+
+@pytest.mark.parametrize("name,expect", [
+    ("sign_flip", lambda y, g, s: g - s * (y - g)),
+    ("scaled_update", lambda y, g, s: g + s * (y - g)),
+])
+def test_model_poison_update_math_and_selection(name, expect):
+    atk = attacks_lib.get(name, 3.0)
+    y = {"w": jnp.asarray([1.0, 2.0, -1.0])}
+    g = {"w": jnp.asarray([0.5, 0.5, 0.5])}
+    key = attacks_lib.round_key(0, 0)
+    hot = atk.poison_update(y, g, jnp.float32(1.0), key)
+    np.testing.assert_allclose(
+        np.asarray(hot["w"]),
+        np.asarray(expect(np.asarray(y["w"]), np.asarray(g["w"]), 3.0)),
+        atol=1e-6)
+    # mal == 0 selects the honest params bit-for-bit
+    cold = atk.poison_update(y, g, jnp.float32(0.0), key)
+    np.testing.assert_array_equal(np.asarray(cold["w"]),
+                                  np.asarray(y["w"]))
+
+
+def test_gauss_noise_deterministic_per_key():
+    atk = attacks_lib.get("gauss_noise", 0.5)
+    y = {"w": jnp.ones((3, 2))}
+    g = {"w": jnp.zeros((3, 2))}
+    k = attacks_lib.round_key(0, 1)
+    a = atk.poison_update(y, g, jnp.float32(1.0), k)
+    b = atk.poison_update(y, g, jnp.float32(1.0), k)
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    assert not np.allclose(np.asarray(a["w"]), np.asarray(y["w"]))
+    k2 = attacks_lib.round_key(0, 2)
+    c = atk.poison_update(y, g, jnp.float32(1.0), k2)
+    assert not np.array_equal(np.asarray(a["w"]), np.asarray(c["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Robust reductions vs numpy references
+# ---------------------------------------------------------------------------
+
+
+def _np_weighted_median(x, w):
+    """Lower weighted median, per coordinate (the numpy reference)."""
+    n = x.shape[0]
+    flat = x.reshape(n, -1)
+    w = np.asarray(w, np.float64) / np.sum(w)
+    out = np.empty(flat.shape[1], np.float64)
+    for j in range(flat.shape[1]):
+        order = np.argsort(flat[:, j], kind="stable")
+        cw = np.cumsum(w[order])
+        out[j] = flat[order, j][np.argmax(cw >= 0.5 * cw[-1])]
+    return out.reshape(x.shape[1:])
+
+
+def test_fedavg_robust_median_matches_numpy_reference():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(5, 4, 3)).astype(np.float32)
+    w = rng.uniform(0.1, 3.0, size=5)
+    got = fusion_lib.fedavg({"w": jnp.asarray(x)}, weights=w,
+                            robust=robust_lib.get("coordinate_median"))
+    np.testing.assert_allclose(np.asarray(got["w"]),
+                               _np_weighted_median(x, w), atol=1e-6)
+
+
+def test_paired_average_per_group_robust_matches_numpy():
+    """fed2 + presence weights + a reducing rule: every group column
+    must reduce with ITS OWN column weights — the per-column numpy
+    medians, stitched back along the group axis."""
+    rng = np.random.default_rng(7)
+    n, g, blk, d = 5, 4, 3, 2
+    x = rng.normal(size=(n, g * blk, d)).astype(np.float32)
+    gw = rng.uniform(0.0, 2.0, size=(n, g))
+    gw[:, 1] = 0.0                        # all-zero column -> uniform
+    ga = {"w": fusion_lib.GroupAxis(0, g)}
+    got = fusion_lib.paired_average(
+        {"w": jnp.asarray(x)}, ga, group_weights=gw,
+        robust=robust_lib.get("coordinate_median"))
+    want = np.empty((g, blk, d), np.float32)
+    for gi in range(g):
+        col = gw[:, gi] if gw[:, gi].sum() > 0 else np.ones(n)
+        want[gi] = _np_weighted_median(x[:, gi * blk:(gi + 1) * blk], col)
+    np.testing.assert_allclose(np.asarray(got["w"]),
+                               want.reshape(g * blk, d), atol=1e-6)
+
+
+def test_robust_rules_idempotent_on_identical_clients():
+    """Honest consensus: when every client sends the same update, every
+    rule (reduce or pre) returns it unchanged."""
+    leaf = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    stacked = jnp.broadcast_to(leaf[None], (5, 3, 4))
+    w = jnp.asarray(np.full(5, 0.2), jnp.float32)
+    for spec in ("coordinate_median", "trimmed_mean(0.3)"):
+        got = robust_lib.parse_robust(spec).reduce(stacked, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(leaf),
+                                   atol=1e-6)
+    clipped = robust_lib.parse_robust("norm_clip(0.001)").pre(
+        {"w": stacked}, {"w": leaf})      # tiny tau: deltas are zero
+    np.testing.assert_allclose(np.asarray(clipped["w"]),
+                               np.asarray(stacked), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Identity pins: the engine compiles the PLAIN round for inactive rules,
+# and a zero-malicious cohort computes the honest round
+# ---------------------------------------------------------------------------
+
+
+def test_trimmed_mean_zero_is_bit_identical_to_plain_run():
+    plain = _final_params("plain")
+    trim0 = _final_params("trim0", robust="trimmed_mean(0)")
+    for a, b in zip(plain, trim0):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_norm_clip_inf_is_bit_identical_to_plain_run():
+    plain = _final_params("plain")
+    clipinf = _final_params("clipinf", robust="norm_clip(inf)")
+    for a, b in zip(plain, clipinf):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zero_malicious_row_matches_honest_round():
+    """The traced poison branch under an all-zero malicious row selects
+    the honest params elementwise — one engine round with the attack
+    compiled in must match the honest engine's round."""
+    task = cnn_task(_PLAIN)
+    gp = task.init_fn(jax.random.PRNGKey(0))
+    batches = _pack_client_batches(_PARTS, _get_batch, 2, 8,
+                                   np.random.default_rng(0))
+    weights = np.maximum([len(p) for p in _PARTS], 1).astype(np.float64)
+    e_h = make_round_engine(task, _fl("fedavg"), gp)
+    e_a = make_round_engine(
+        task, _fl("fedavg", attack="sign_flip(4)", attack_fraction=0.2),
+        gp)
+    _, g_h = e_h.run_round(e_h.init_state(gp), gp, batches,
+                           weights=weights)
+    mal = (np.zeros(6, np.float32), attacks_lib.round_key(0, 0))
+    _, g_a = e_a.run_round(e_a.init_state(gp), gp, batches,
+                           weights=weights, malicious=mal)
+    for a, b in zip(jax.tree_util.tree_leaves(g_h),
+                    jax.tree_util.tree_leaves(g_a)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_robust_without_attack_stays_near_plain():
+    """An active robust rule on an all-honest cohort must not derail
+    training: trimmed_mean(0.25) over honest updates lands within a
+    loose accuracy tolerance of the plain run (identical everything
+    else)."""
+    h_plain = _run("fedavg")
+    h_trim = _run("fedavg", robust="trimmed_mean(0.25)")
+    assert abs(h_plain["acc"][-1] - h_trim["acc"][-1]) < 0.25, (
+        h_plain["acc"], h_trim["acc"])
+
+
+# ---------------------------------------------------------------------------
+# End-to-end adversarial runs + assignment stability under sampling
+# ---------------------------------------------------------------------------
+
+
+def test_attacked_run_executes_and_flags_population():
+    h = _run("fedavg", attack="sign_flip(2)", attack_fraction=0.2)
+    assert len(h["acc"]) == 2
+
+
+def test_attack_with_partial_participation_runs():
+    """Attacker flags live on the POPULATION (client-id indexed), so a
+    uniform sub-cohort round gathers the right per-slot rows."""
+    h = _run("fedavg", attack="sign_flip(2)", attack_fraction=0.2,
+             cohort_size=3, sampler="uniform")
+    assert len(h["acc"]) == 2
+
+
+def test_label_flip_run_keeps_device_program_honest():
+    """Data poisoning happens at host packing time; the run executes
+    with the plain engine (no malicious inputs threaded)."""
+    h = _run("fed2", attack="label_flip", attack_fraction=0.2)
+    assert len(h["acc"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Eligibility refusals
+# ---------------------------------------------------------------------------
+
+
+def test_fedma_refuses_robust_fusion():
+    meth = methods_lib.get("fedma")
+    assert not meth.robust_fusion
+    with pytest.raises(ValueError, match="host-fusion"):
+        robust_lib.check_robust_support(
+            meth, robust_lib.parse_robust("coordinate_median"))
+    with pytest.raises(ValueError, match="robust_fusion"):
+        _fl("fedma", robust="coordinate_median")
+    # every non-host-fusion method is eligible
+    for name in methods_lib.available():
+        m = methods_lib.get(name)
+        assert m.robust_fusion == (not m.host_fusion)
+
+
+def test_adversarial_knobs_exclude_tiers_and_async():
+    with pytest.raises(ValueError, match="tiers"):
+        _fl("fedavg", attack="sign_flip(2)", attack_fraction=0.2,
+            tiers=((1.0, 3), (0.5, 3)))
+    with pytest.raises(ValueError, match="tiers"):
+        _fl("fedavg", robust="coordinate_median",
+            tiers=((1.0, 3), (0.5, 3)))
+    with pytest.raises(ValueError, match="async"):
+        _fl("fedavg", attack="sign_flip(2)", attack_fraction=0.2,
+            mode="async", cohort_size=3, sampler="uniform")
+
+
+def test_attack_fraction_requires_attack():
+    with pytest.raises(ValueError, match="without attack"):
+        _fl("fedavg", attack_fraction=0.2)
+
+
+def test_reducing_rule_refuses_tiled_rounds():
+    """A reducing rule has no exact tiled form (the weighted quantile is
+    not affine), so full participation past the cohort width must refuse
+    instead of silently fusing per-tile statistics."""
+    with pytest.raises(ValueError, match="no exact tiled form"):
+        _run("fedavg", robust="coordinate_median", cohort_size=3)
+    # pre-only rules stay affine -> tiling is exact and allowed
+    h = _run("fedavg", robust="norm_clip(5)", cohort_size=3)
+    assert len(h["acc"]) == 2
+
+
+def test_label_flip_refuses_tasks_without_classes():
+    task = dataclasses.replace(cnn_task(_PLAIN), n_classes=None)
+    with pytest.raises(ValueError, match="n_classes"):
+        run_federated(task, _fl("fedavg", attack="label_flip",
+                                attack_fraction=0.2),
+                      _PARTS, _get_batch, _TEST_BATCHES)

@@ -19,8 +19,8 @@ def test_design_md_exists_with_cited_sections():
     # §7 Data/§7.1 Synthetic renumbered to §8/§8.1 when §6 was inserted;
     # §9 = population & participation; §10 = scenarios & evaluation;
     # §11 = heterogeneous capacity; §12 = buffered-async federation;
-    # §13 = out-of-core client state)
-    for must in ("3", "5", "6", "8.1", "9", "10", "11", "12", "13",
+    # §13 = out-of-core client state; §14 = adversarial federation)
+    for must in ("3", "5", "6", "8.1", "9", "10", "11", "12", "13", "14",
                  "Shape-applicability"):
         assert must in sections, (must, sections)
 
@@ -149,6 +149,43 @@ def test_design_documents_out_of_core():
         assert needle in s13, f"DESIGN.md §13 lost {needle!r}"
 
 
+def test_design_documents_adversarial_federation():
+    """DESIGN.md §14 must keep describing the attack registry, the traced
+    malicious row, the robust rules with their breakdown/identity
+    guarantees and the single refusal point — the contracts
+    tests/test_adversarial.py pins in code."""
+    text = (ROOT / "DESIGN.md").read_text()
+    s14 = text.split("## §14")[1].split("\n## ")[0]
+    for needle in ("AttackSpec", "label_flip", "sign_flip",
+                   "coordinate_median", "trimmed_mean", "norm_clip",
+                   "robust_fusion", "malicious", "BIT-IDENTICAL",
+                   "breakdown", "check_robust_support", "bench_robust",
+                   "max_wall_s"):
+        assert needle in s14, f"DESIGN.md §14 lost {needle!r}"
+
+
+def test_readme_attack_table_matches_registry():
+    """The README attack table carries a row per registered attack, and
+    the robust table a row per registered rule."""
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.fl import attacks, robust
+    readme = (ROOT / "README.md").read_text()
+    for name in attacks.available():
+        assert f"| `{name}" in readme, f"README attack table misses {name}"
+    for name in robust.available():
+        assert f"| `{name}" in readme, f"README robust table misses {name}"
+
+
+def test_readme_documents_adversarial_flags():
+    """The README must carry the adversarial CLI flags, the benchmark
+    entry point and the wall-clock WARN row."""
+    readme = (ROOT / "README.md").read_text()
+    for needle in ("--attack", "--attack-fraction", "--robust",
+                   "bench-robust", "max_wall_s"):
+        assert needle in readme, f"README adversarial docs lost {needle!r}"
+
+
 def test_readme_documents_async_mode():
     """The README must carry the buffered-async section: the mode/flag
     table rows and the equivalence pin, matching the FLConfig knobs."""
@@ -178,8 +215,8 @@ def test_readme_tier_table_covers_registered_widths():
 
 def test_makefile_has_tier_and_drift_targets():
     mk = (ROOT / "Makefile").read_text()
-    for target in ("bench-tiers:", "bench-async:", "check-drift:",
-                   "bench-population:"):
+    for target in ("bench-tiers:", "bench-async:", "bench-robust:",
+                   "check-drift:", "bench-population:"):
         assert target in mk, f"Makefile lost {target}"
     assert "check_drift.py" in mk
     assert "REPRO_BENCH_POPULATIONS" in mk, \
@@ -211,6 +248,7 @@ def test_ci_runs_tier1_under_both_hash_seeds():
     assert "PYTHONHASHSEED" in ci, "CI lost the hash-seed matrix"
     assert '"random"' in ci and '"0"' in ci
     assert "bench_async" in ci, "CI smoke lost the async benchmark"
+    assert "bench_robust" in ci, "CI smoke lost the robust benchmark"
 
 
 def test_readme_quotes_tier1_verify():

@@ -139,6 +139,61 @@ def test_status_flip_goes_red(dirs):
             "'ok' -> 'error'") in res["drift"]
 
 
+def test_wall_budget_overrun_warns_without_failing(dirs):
+    """The wall-clock budget row: a fresh run blowing past the committed
+    max_wall_s produces a WARN entry but NEVER fails the gate — wall
+    clock is machine-dependent, unlike lowering stats."""
+    fresh, committed = dirs
+    base = copy.deepcopy(_REC)
+    base["wall_s"], base["max_wall_s"] = 3.1, 13.0
+    _write(committed, "dryrun_fl_round_fedavg_cnn_1x1.json", base)
+    slow = copy.deepcopy(_REC)
+    slow["wall_s"] = 40.0
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", slow)
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    assert res["drift"] == []
+    assert [n for n, _ in res["warn"]] == \
+        ["dryrun_fl_round_fedavg_cnn_1x1.json"]
+    assert "max_wall_s" in res["warn"][0][1]
+    # non-blocking: exit code stays 0 despite the warning
+    assert check_drift.main(["--fresh", str(fresh),
+                             "--committed", str(committed)]) == 0
+
+
+def test_wall_budget_within_budget_stays_silent(dirs):
+    fresh, committed = dirs
+    base = copy.deepcopy(_REC)
+    base["wall_s"], base["max_wall_s"] = 3.1, 13.0
+    _write(committed, "dryrun_fl_round_fedavg_cnn_1x1.json", base)
+    fine = copy.deepcopy(_REC)
+    fine["wall_s"] = 12.9
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", fine)
+    assert check_drift.compare_dirs(str(fresh), str(committed))["warn"] \
+        == []
+    # records with no committed budget (pre-budget baselines) never warn
+    fast = copy.deepcopy(_REC)
+    fast["wall_s"] = 9999.0
+    _write(committed, "dryrun_fl_round_fedavg_cnn_1x1.json", _REC)
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", fast)
+    assert check_drift.compare_dirs(str(fresh), str(committed))["warn"] \
+        == []
+
+
+def test_wall_budget_falls_back_to_lower_plus_compile(dirs):
+    """A fresh record without wall_s (older writer) is judged on
+    lower_s + compile_s so the budget row still has signal."""
+    fresh, committed = dirs
+    base = copy.deepcopy(_REC)
+    base["max_wall_s"] = 10.0
+    _write(committed, "dryrun_fl_round_fedavg_cnn_1x1.json", base)
+    slow = copy.deepcopy(_REC)
+    slow.pop("wall_s", None)
+    slow["lower_s"], slow["compile_s"] = 6.0, 7.0    # 13.0 > 10.0
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", slow)
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    assert len(res["warn"]) == 1 and "13.0s" in res["warn"][0][1]
+
+
 def test_write_baseline_updates_committed(dirs):
     fresh, committed = dirs
     worse = copy.deepcopy(_REC)

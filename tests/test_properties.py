@@ -263,3 +263,80 @@ def test_alias_table_build_and_draws_deterministic(w, seed):
     np.testing.assert_array_equal(
         a.sample_without_replacement(np.random.default_rng(seed), k),
         b.sample_without_replacement(np.random.default_rng(seed), k))
+
+
+# ---------------------------------------------------------------------------
+# Robust fusion reductions (fl/robust.py, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+from repro.fl import robust as robust_lib                  # noqa: E402
+
+_rob_weights = st.lists(st.floats(0.05, 20.0), min_size=2, max_size=8)
+
+
+def _rob_stack(data, w, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(len(w), 3, 4)).astype(np.float32), \
+        np.asarray(w, np.float64)
+
+
+@SET
+@given(_rob_weights, st.integers(0, 2**31 - 1))
+def test_trimmed_mean_beta_zero_is_weighted_mean(w, seed):
+    """trimmed_mean at beta=0 trims nothing: the reduction must equal
+    the plain weighted mean (the identity plain fusion computes) — the
+    zero-attacker anchor of the trim family."""
+    x, wa = _rob_stack(None, w, seed)
+    rule = robust_lib.get("trimmed_mean", 0.0)
+    got = np.asarray(rule.reduce(jnp.asarray(x), jnp.asarray(
+        wa / wa.sum(), jnp.float32)))
+    want = (x * (wa / wa.sum())[:, None, None]).sum(0)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@SET
+@given(_rob_weights, st.integers(0, 2**31 - 1), st.data())
+def test_coordinate_median_permutation_invariant(w, seed, data):
+    """Shuffling the client axis (values AND weights together) never
+    changes the coordinate median — fusion must not care who sent
+    what, only the weighted multiset per coordinate."""
+    x, wa = _rob_stack(None, w, seed)
+    perm = np.asarray(data.draw(st.permutations(range(len(w)))))
+    rule = robust_lib.get("coordinate_median")
+    out = np.asarray(rule.reduce(jnp.asarray(x), jnp.asarray(wa)))
+    per = np.asarray(rule.reduce(jnp.asarray(x[perm]),
+                                 jnp.asarray(wa[perm])))
+    np.testing.assert_array_equal(per, out)
+
+
+@SET
+@given(_rob_weights, st.integers(0, 2**31 - 1))
+def test_norm_clip_infinite_tau_is_identity(w, seed):
+    """norm_clip at tau=inf clips nothing: the rule reports itself
+    inactive (``active`` False — the engine then compiles the exact
+    plain program) and its pre-transform is the identity."""
+    rule = robust_lib.get("norm_clip", float("inf"))
+    assert not rule.active
+    x, _ = _rob_stack(None, w, seed)
+    g = x[0] * 0.5
+    out = rule.pre({"w": jnp.asarray(x)}, {"w": jnp.asarray(g)})
+    np.testing.assert_allclose(np.asarray(out["w"]), x, atol=1e-6)
+
+
+@SET
+@given(st.lists(st.floats(0.2, 5.0), min_size=3, max_size=9),
+       st.integers(0, 2**31 - 1),
+       st.floats(-1e6, 1e6, allow_nan=False))
+def test_median_breakdown_single_attacker_stays_in_honest_envelope(
+        w, seed, poison):
+    """Breakdown sanity: ONE arbitrarily-scaled update (minority weight)
+    cannot move the weighted coordinate median outside the honest
+    values' [min, max] envelope per coordinate — the guarantee a mean
+    provably lacks (one term drags it anywhere)."""
+    x, wa = _rob_stack(None, w, seed)
+    x[0] = poison                      # attacker overwrites its update
+    wa[0] = min(wa[1:].min(), wa[0])   # keep its mass a strict minority
+    rule = robust_lib.get("coordinate_median")
+    got = np.asarray(rule.reduce(jnp.asarray(x), jnp.asarray(wa)))
+    lo, hi = x[1:].min(axis=0), x[1:].max(axis=0)
+    assert (got >= lo - 1e-6).all() and (got <= hi + 1e-6).all()
