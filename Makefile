@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-claims smoke smoke-scenario scenarios bench-infra \
 	bench-cohort bench-population bench-eval bench-tiers bench-async \
-	bench-robust dryrun-fl check-drift
+	bench-robust bench-engine dryrun-fl check-drift
 
 # the tier-1 gate (ROADMAP.md)
 test:
@@ -48,6 +48,13 @@ check-drift:
 	$(PY) -m repro.launch.fl_dryrun --mesh host --clients 4 \
 	    --local-steps 2 --batch 8 --seq 32 --out $(DRIFT_FRESH)
 	$(PY) benchmarks/check_drift.py --fresh $(DRIFT_FRESH)
+
+# jitted round engine vs the seed loop: default, fused-dispatch
+# (local_unroll) and bf16+codec rows, uplink bytes per client; prints a
+# non-blocking [WARN] when the fresh headline speedup falls >20% below
+# the committed flbench_engine.json claim (DESIGN.md §15)
+bench-engine:
+	$(PY) benchmarks/flbench.py bench_engine
 
 # host-loop rounds/sec + resident memory vs population at fixed cohort,
 # out-of-core client-state store, 10^4..10^6 clients (DESIGN.md §9, §13)

@@ -19,6 +19,12 @@ Policy per field (``FIELDS``):
     (``--rtol-temp``, default 10% — XLA's buffer-assignment temp total
     wobbles with scheduling decisions the PR didn't make).
 
+The gate is symmetric: a stat that IMPROVED (fewer flops, smaller
+bytes) fails too, with the line labelled ``IMPROVEMENT`` — the
+committed baselines are the repo's perf claims, so a win the PR
+produced must be claimed by regenerating and committing the baseline,
+not silently absorbed.
+
 Wall-clock budget row (non-blocking): a committed baseline may declare
 ``max_wall_s`` — a generous ceiling on the case's lower+compile wall
 clock (fl_dryrun stamps one automatically at 4x the measured wall,
@@ -89,23 +95,38 @@ def _get(rec: dict, dotted: str):
 
 
 def _drifted(old, new, policy: str, rtol: float, rtol_temp: float):
-    """None when within policy, else a short reason."""
+    """None when within policy, else a short reason.
+
+    The gate is symmetric — a stat that got BETTER (fewer flops, fewer
+    bytes) fails exactly like a regression, because the committed
+    baselines ARE the perf claims and an unclaimed win is a claim the
+    repo forgot to make. Such lines are labelled ``IMPROVEMENT`` so the
+    fix is obvious: regenerate + commit the baseline."""
     if old is _MISSING and new is _MISSING:
         return None
     if old is _MISSING:
         return "field added (baseline lacks it — regenerate baselines)"
     if new is _MISSING:
         return "field missing from fresh record"
-    if policy == "exact" or not isinstance(old, (int, float)) \
-            or isinstance(old, bool) or isinstance(new, bool):
-        return None if old == new else f"{old!r} -> {new!r}"
-    tol = rtol_temp if policy == "rtol-temp" else rtol
-    denom = max(abs(float(old)), 1e-12)
-    rel = abs(float(new) - float(old)) / denom
-    if rel <= tol:
-        return None
-    return (f"{old!r} -> {new!r} "
-            f"({rel:+.2%} vs ±{tol:.0%} tolerance)")
+    numeric = (isinstance(old, (int, float)) and not isinstance(old, bool)
+               and isinstance(new, (int, float))
+               and not isinstance(new, bool))
+    if policy == "exact" or not numeric:
+        if old == new:
+            return None
+        reason = f"{old!r} -> {new!r}"
+    else:
+        tol = rtol_temp if policy == "rtol-temp" else rtol
+        denom = max(abs(float(old)), 1e-12)
+        rel = abs(float(new) - float(old)) / denom
+        if rel <= tol:
+            return None
+        reason = (f"{old!r} -> {new!r} "
+                  f"({rel:+.2%} vs ±{tol:.0%} tolerance)")
+    if numeric and float(new) < float(old):
+        reason += (" — IMPROVEMENT: claim it by committing the new "
+                   "baseline (make smoke / --write-baseline)")
+    return reason
 
 
 def _mesh_tag(name: str) -> str:

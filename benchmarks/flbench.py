@@ -8,7 +8,6 @@ RELATIVE orderings, not absolute accuracies.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time
@@ -148,37 +147,47 @@ def _engine_fixture(nodes, steps_per_epoch, batch):
 
 
 def bench_engine(*, nodes=4, rounds=None, steps_per_epoch=6,
-                 batch=16) -> dict:
-    """Steady-state rounds/sec: the fused round engine (one jitted round,
-    no per-round host sync) vs the seed-style loop, both warmed up
-    (compile excluded) and fed the same fixed batch set — the final params
-    of the two sequences must agree."""
+                 batch=16, local_unroll=6, codec="int8") -> dict:
+    """Steady-state rounds/sec: the jitted round engine vs the seed-style
+    loop, both warmed up (compile excluded) and fed the same fixed batch
+    set. Three engine rows (DESIGN.md §15):
+
+      engine           the default config — bit-comparable to the seed
+                       loop (final params must agree to 1e-4)
+      engine_fused     + local_unroll batched dispatch (the fused local
+                       phase; same arithmetic, tolerance-equal params).
+                       Its speedup is the record's headline ``speedup``
+                       — the number the honest-numbers tables quote.
+      engine_bf16_*    + bf16 local phase + uplink codec; its row also
+                       carries the per-client uplink bytes against the
+                       dense uplink (the compression economics).
+
+    If a committed flbench_engine.json exists, a fresh headline speedup
+    more than 20% below it prints a NON-BLOCKING [WARN] (wall clock is
+    machine noise; the committed number is the claim)."""
     import jax
     from repro.core import fusion as fusion_lib
-    from repro.fl.engine import make_local_phase, make_round_engine
+    from repro.fl import codec as codec_lib
+    from repro.fl.engine import (make_local_phase, make_round_engine,
+                                 stacked_param_bytes)
     from repro.optim.optimizers import sgd
 
     rounds = rounds or (6 if QUICK else 14)
     batches, weights = _engine_fixture(nodes, steps_per_epoch, batch)
     cfg = model_cfg("vgg9", "fed2")
-    fl = FLConfig(population=nodes, rounds=rounds, local_epochs=1,
-                  steps_per_epoch=steps_per_epoch, batch_size=batch,
-                  lr=0.008, momentum=0.9, method="fed2", seed=0)
     task = cnn_task(cfg)
     gp0 = task.init_fn(jax.random.PRNGKey(0))
 
-    engine = make_round_engine(task, fl, gp0)
-    state0 = engine.init_state(gp0)
-    jax.block_until_ready(engine.run_round(state0, gp0, batches,
-                                           weights=weights))  # compile
-    t0 = time.time()
-    st, g_e = state0, gp0
-    for _ in range(rounds):
-        st, g_e = engine.run_round(st, g_e, batches, weights=weights)
-    jax.block_until_ready(g_e)
-    engine_s = time.time() - t0
+    def fl_cfg(**kw):
+        return FLConfig(population=nodes, rounds=rounds, local_epochs=1,
+                        steps_per_epoch=steps_per_epoch, batch_size=batch,
+                        lr=0.008, momentum=0.9, method="fed2", seed=0,
+                        **kw)
 
-    local = jax.jit(make_local_phase(task, fl, sgd(fl.lr, fl.momentum)))
+    # -- the seed-style loop: host-driven broadcast/local/fuse, synced
+    #    every round (the pre-engine reference semantics)
+    fl0 = fl_cfg()
+    local = jax.jit(make_local_phase(task, fl0, sgd(fl0.lr, fl0.momentum)))
     ga = task.group_axes_fn(gp0)
 
     def seed_round(g):
@@ -194,19 +203,74 @@ def bench_engine(*, nodes=4, rounds=None, steps_per_epoch=6,
     for _ in range(rounds):
         g_s = seed_round(g_s)
     seed_s = time.time() - t0
+    seed_leaves = jax.tree_util.tree_leaves(g_s)
 
-    diff = max(float(jnp.max(jnp.abs(a - b)))
-               for a, b in zip(jax.tree_util.tree_leaves(g_e),
-                               jax.tree_util.tree_leaves(g_s)))
+    def engine_row(name, fl, **extra):
+        engine = make_round_engine(task, fl, gp0)
+        state0 = engine.init_state(gp0)
+        jax.block_until_ready(engine.run_round(state0, gp0, batches,
+                                               weights=weights))  # compile
+        t0 = time.time()
+        st, g = state0, gp0
+        for _ in range(rounds):
+            st, g = engine.run_round(st, g, batches, weights=weights)
+        jax.block_until_ready(g)
+        dt = time.time() - t0
+        diff = max(float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree_util.tree_leaves(g), seed_leaves))
+        return {"name": name, "s": round(dt, 3),
+                "rounds_per_s": round(rounds / dt, 3),
+                "speedup_vs_seed": round(seed_s / dt, 3),
+                "max_param_diff": diff, **extra}
+
+    base = engine_row("engine", fl_cfg())
+    fused = engine_row("engine_fused", fl_cfg(local_unroll=local_unroll),
+                       local_unroll=local_unroll)
+    dense = stacked_param_bytes(task, 1)
+    up = codec_lib.parse_codec(codec).bytes_per_client(
+        jax.eval_shape(task.init_fn, jax.random.PRNGKey(0)))
+    fast = engine_row(f"engine_bf16_{codec.split('(', 1)[0]}",
+                      fl_cfg(local_unroll=local_unroll,
+                             compute_dtype="bfloat16", codec=codec),
+                      local_unroll=local_unroll,
+                      compute_dtype="bfloat16", codec=codec,
+                      uplink_bytes_per_client=up,
+                      dense_bytes_per_client=dense,
+                      uplink_frac=round(up / dense, 4))
+
     rec = {"name": "flbench_engine", "nodes": nodes, "rounds": rounds,
-           "engine_s": round(engine_s, 3), "seed_loop_s": round(seed_s, 3),
-           "engine_rounds_per_s": round(rounds / engine_s, 3),
+           "method": "fed2",
+           "seed_loop_s": round(seed_s, 3),
            "seed_rounds_per_s": round(rounds / seed_s, 3),
-           "speedup": round(seed_s / engine_s, 3),
-           "max_param_diff": diff, "params_match": bool(diff < 1e-4)}
+           # headline: the fp32 fused-dispatch row — same arithmetic as
+           # the seed loop, so its speedup is the apples-to-apples claim
+           "engine_s": fused["s"],
+           "engine_rounds_per_s": fused["rounds_per_s"],
+           "speedup": fused["speedup_vs_seed"],
+           "max_param_diff": fused["max_param_diff"],
+           # two separate claims: the default fp32 engine reproduces the
+           # seed loop BIT-identically (params_match), while the unrolled
+           # row is tolerance-class — XLA re-association drift compounds
+           # through training, so the bound scales with the round count
+           "params_match": bool(base["max_param_diff"] == 0.0),
+           "fused_within_tol": bool(
+               fused["max_param_diff"] < 5e-4 * rounds),
+           "rows": [base, fused, fast]}
+    path = os.path.join(ARTIFACTS_PERF, "flbench_engine.json")
+    if os.path.exists(path):      # WARN vs the committed claim, never red
+        try:
+            with open(path) as f:
+                old = json.load(f).get("speedup")
+        except (OSError, ValueError):
+            old = None
+        if isinstance(old, (int, float)) and rec["speedup"] < 0.8 * old:
+            print(f"[WARN] flbench_engine: fresh speedup "
+                  f"{rec['speedup']:.2f}x fell >20% below the committed "
+                  f"{old:.2f}x (non-blocking: wall clock is machine "
+                  "noise; regenerate+commit if the regression is real)")
     os.makedirs(ARTIFACTS_PERF, exist_ok=True)
-    with open(os.path.join(ARTIFACTS_PERF, "flbench_engine.json"),
-              "w") as f:
+    with open(path, "w") as f:
         json.dump(rec, f, indent=1)
     return rec
 
@@ -666,6 +730,13 @@ def main(argv=None):
         print(f"fl_engine_round,{us:.0f},"
               f"speedup_vs_seed_loop={rec['speedup']:.2f}x,"
               f"params_match={rec['params_match']}")
+        for r in rec["rows"]:
+            extra = (f",uplink_frac={r['uplink_frac']}"
+                     if "uplink_frac" in r else "")
+            print(f"fl_engine_{r['name']},"
+                  f"{round(1e6 * r['s'] / rec['rounds'])},"
+                  f"speedup_vs_seed_loop={r['speedup_vs_seed']:.2f}x"
+                  f"{extra}")
     if "bench_methods" in chosen:
         for r in bench_methods():
             print(f"fl_method_{r['method']},{r['us_per_round']},"

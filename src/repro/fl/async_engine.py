@@ -52,7 +52,8 @@ from repro.core import fusion as fusion_lib
 from repro.fl import evaluation as evaluation_lib
 from repro.fl import methods as methods_lib
 from repro.fl import population as population_lib
-from repro.fl.engine import _client_sharding, resolve_use_kernel
+from repro.fl.engine import (_client_sharding, resolve_local_unroll,
+                             resolve_use_kernel)
 from repro.fl.methods import FedMethod, MethodContext
 from repro.fl.population import Population
 
@@ -297,12 +298,14 @@ def make_async_engine(task, cfg, params_like: PyTree, *, mesh=None,
     ga = None
     if meth.uses_groups and task.group_axes_fn is not None:
         ga = task.group_axes_fn(params_like)
+    steps = cfg.local_epochs * cfg.steps_per_epoch
     ctx = MethodContext(task=task, cfg=cfg, population=cfg.population,
                         cohort_size=C,
-                        local_steps=cfg.local_epochs * cfg.steps_per_epoch,
+                        local_steps=steps,
                         opt=opt, weights=None, raw_weights=None,
                         group_axes=ga, group_weights=None,
-                        use_kernel=use_kernel)
+                        use_kernel=use_kernel,
+                        local_unroll=resolve_local_unroll(cfg, steps))
     meth.check(ctx)
 
     def local_phase(global_params, batches):

@@ -1,0 +1,276 @@
+"""Composable uplink codecs (DESIGN.md §15).
+
+A codec compresses the CLIENT->SERVER uplink: each client's round delta
+``y_i - x`` (its trained params against the round's global) is encoded,
+shipped, and decoded BEFORE fusion — decode-then-fuse, so the method's
+``fuse`` (and any robust rule wrapping it) runs on dense trees and never
+learns a codec was involved. Inside the jitted round the engine applies
+``codec.roundtrip(stacked, global)`` between the local phase and the
+fuse (fl/engine.py ``local_and_fuse``), which is exactly what a real
+transport would reconstruct server-side; ``bytes_per_client`` reports
+what that transport would actually move (the uplink column of
+``bench_engine``/``fl_dryrun``).
+
+Registered codecs (methods-style ``register``/``get``/``available()``;
+specs parse as ``name`` or ``name(param)`` like attacks/robust):
+
+- ``identity``   the dense uplink, byte-exact: ``roundtrip`` returns the
+                 stacked params UNTOUCHED (never through the delta
+                 arithmetic — ``(y - x) + x != y`` in floats), so an
+                 identity-codec round is BIT-IDENTICAL to no codec.
+- ``int8``       symmetric per-leaf-per-client quantization: scale =
+                 max|d|/127, q = round(d/scale) in int8. The decode error
+                 is bounded by scale/2 per coordinate
+                 (tests/test_properties.py); ~4x smaller uplink.
+- ``topk(f)``    magnitude sketch: per leaf, each client ships only the
+                 ceil(f * m) largest-|d| coordinates (values + int32
+                 indices); decode scatters into zeros — EXACT on its
+                 support, zero elsewhere.
+
+Eligibility follows the tiers/async/robust convention
+(``FedMethod.uplink_codec`` + ``check_codec_support`` as THE single copy
+of the refusal, called by both FLConfig validation and
+``make_round_engine``): decode-then-fuse needs a device-side affine fuse
+over the stacked updates — host_fusion (fedma) never fuses on device and
+client_stateful methods (scaffold) correct drift off the exact params,
+which a lossy uplink would silently bias. Reducing robust rules
+(coordinate_median/trimmed_mean) additionally refuse LOSSY codecs: their
+breakdown guarantee is proven for the updates the clients sent, not for
+quantized reconstructions (the identity codec is exact and composes).
+"""
+from __future__ import annotations
+
+import math
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.methods import FedMethod
+
+
+def check_codec_support(method: FedMethod, codec=None, robust=None) -> None:
+    """Raise unless ``method`` (and the active robust rule) can carry the
+    codec — THE single copy of the eligibility rule (FLConfig validation
+    and make_round_engine both call it)."""
+    if not method.uplink_codec:
+        what = codec.describe() if codec is not None else "an uplink codec"
+        raise ValueError(
+            f"{method.name} does not support {what} "
+            "(FedMethod.uplink_codec): decode-then-fuse reconstructs the "
+            "client deltas on the device right before an affine fuse — "
+            "host-fusion methods never fuse on device, and "
+            "client-stateful methods correct drift off the exact local "
+            "params, which a lossy uplink would silently bias")
+    if (codec is not None and robust is not None and robust.reduces
+            and not codec.exact):
+        raise ValueError(
+            f"robust rule {robust.describe()!r} refuses lossy codec "
+            f"{codec.describe()!r}: the reducing rules' breakdown "
+            "guarantee is proven for the updates the clients sent, not "
+            "for quantized reconstructions — use the exact 'identity' "
+            "codec or drop the robust rule")
+
+
+class UplinkCodec:
+    """One uplink compression scheme. ``roundtrip`` is what the engine
+    traces (encode -> decode against the round's global); ``encode`` /
+    ``decode`` stay exposed as the transport-shaped halves the
+    round-trip properties pin."""
+
+    name: str = ""
+    summary: str = ""          # one line for the README codec table
+    exact = False              # decode(encode(d)) == d bit-for-bit
+
+    def describe(self) -> str:
+        return self.name
+
+    # -- transport halves ---------------------------------------------------
+
+    def encode(self, deltas):
+        """Stacked (N, ...) client-delta tree -> encoded tree (what the
+        uplink ships)."""
+        raise NotImplementedError
+
+    def decode(self, encoded):
+        """Encoded tree -> stacked (N, ...) delta reconstruction."""
+        raise NotImplementedError
+
+    # -- the traced round hook ---------------------------------------------
+
+    def roundtrip(self, stacked, global_params):
+        """What the server holds after decode: global + decoded deltas.
+        Traced inside the jitted round between local phase and fuse."""
+        deltas = jax.tree_util.tree_map(
+            lambda y, x: y - x[None].astype(y.dtype), stacked,
+            global_params)
+        dec = self.decode(self.encode(deltas))
+        return jax.tree_util.tree_map(
+            lambda d, x: x[None].astype(d.dtype) + d, dec, global_params)
+
+    # -- accounting ---------------------------------------------------------
+
+    def bytes_per_client(self, param_tree) -> int:
+        """Uplink bytes ONE client ships per round under this codec (the
+        honest-numbers column; param_tree may be arrays or eval_shape
+        structs)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type[UplinkCodec]] = {}
+
+
+def register(cls: type[UplinkCodec]) -> type[UplinkCodec]:
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available() -> tuple[str, ...]:
+    """All registered codec names, sorted (CLIs, benches, README table)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str, *args) -> UplinkCodec:
+    """Resolve a fresh codec instance by registry name."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown uplink codec {name!r}; available: "
+            f"{', '.join(available())}") from None
+    return cls(*args)
+
+
+_SPEC_RE = re.compile(r"^\s*([a-z0-9_]+)\s*(?:\(\s*([^)]*?)\s*\))?\s*$")
+
+
+def parse_codec(spec: str) -> UplinkCodec:
+    """``"identity"`` | ``"int8"`` | ``"topk(0.05)"`` -> instance (the
+    attacks/robust spec grammar)."""
+    m = _SPEC_RE.match(spec or "")
+    if not m:
+        raise ValueError(
+            f"bad codec spec {spec!r}: expected name or name(param), "
+            f"e.g. 'int8' or 'topk(0.05)'")
+    name, arg = m.group(1), m.group(2)
+    return get(name) if arg in (None, "") else get(name, float(arg))
+
+
+def _leaf_sizes(param_tree):
+    for leaf in jax.tree_util.tree_leaves(param_tree):
+        yield int(np.prod(leaf.shape)), np.dtype(leaf.dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+
+@register
+class IdentityCodec(UplinkCodec):
+    """The dense uplink. ``roundtrip`` returns the stacked params
+    UNCHANGED — never through the delta round-trip, because
+    ``(y - x) + x`` is not ``y`` in floats and the identity codec's
+    contract is bit-identity end to end."""
+    name = "identity"
+    summary = "dense uplink, byte-exact (bit-identical rounds)"
+    exact = True
+
+    def encode(self, deltas):
+        return deltas
+
+    def decode(self, encoded):
+        return encoded
+
+    def roundtrip(self, stacked, global_params):
+        return stacked
+
+    def bytes_per_client(self, param_tree) -> int:
+        return sum(n * isz for n, isz in _leaf_sizes(param_tree))
+
+
+@register
+class Int8Codec(UplinkCodec):
+    """Symmetric per-leaf-per-client int8 quantization of the delta:
+    scale = max|d|/127 (1.0 when the delta is all-zero — decode is then
+    exact zero anyway), q = round(d/scale) in [-127, 127]. The decode
+    error is bounded by scale/2 per coordinate."""
+    name = "int8"
+    summary = "per-leaf symmetric int8 delta quantization (~4x uplink)"
+
+    def encode(self, deltas):
+        def enc(d):
+            red = tuple(range(1, d.ndim))
+            amax = jnp.max(jnp.abs(d.astype(jnp.float32)), axis=red,
+                           keepdims=True)
+            scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+            q = jnp.clip(jnp.round(d.astype(jnp.float32) / scale),
+                         -127, 127).astype(jnp.int8)
+            return {"q": q, "scale": scale}
+        return jax.tree_util.tree_map(enc, deltas)
+
+    def decode(self, encoded):
+        return jax.tree_util.tree_map(
+            lambda e: e["q"].astype(jnp.float32) * e["scale"],
+            encoded, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+    def bytes_per_client(self, param_tree) -> int:
+        # 1 byte per coordinate + one f32 scale per leaf
+        return sum(n * 1 + 4 for n, _ in _leaf_sizes(param_tree))
+
+
+@register
+class TopKCodec(UplinkCodec):
+    """Magnitude sketch: per leaf, each client ships the ceil(frac * m)
+    largest-|d| coordinates as (value, int32 index) pairs; decode
+    scatters into zeros. Exact on its support, zero off it."""
+    name = "topk"
+    summary = "per-leaf top-k(|delta|) sketch (values + indices uplink)"
+
+    def __init__(self, frac: float = 0.05):
+        if not (0.0 < frac <= 1.0):
+            raise ValueError(
+                f"topk codec fraction must be in (0, 1], got {frac!r}")
+        self.frac = float(frac)
+
+    def describe(self) -> str:
+        return f"topk({self.frac:g})"
+
+    def _k(self, m: int) -> int:
+        return min(m, max(1, math.ceil(self.frac * m)))
+
+    def encode(self, deltas):
+        def enc(d):
+            n = d.shape[0]
+            flat = d.reshape(n, -1).astype(jnp.float32)
+            k = self._k(flat.shape[1])
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            vals = jnp.take_along_axis(flat, idx, axis=1)
+            return {"vals": vals, "idx": idx.astype(jnp.int32),
+                    "shape": d.shape}
+        return jax.tree_util.tree_map(enc, deltas)
+
+    def decode(self, encoded):
+        def dec(e):
+            shape = e["shape"]
+            n = shape[0]
+            m = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+            flat = jnp.zeros((n, m), jnp.float32)
+            flat = jax.vmap(lambda z, i, v: z.at[i].set(v))(
+                flat, e["idx"], e["vals"])
+            return flat.reshape(shape)
+        return jax.tree_util.tree_map(
+            dec, encoded,
+            is_leaf=lambda x: isinstance(x, dict) and "vals" in x)
+
+    def bytes_per_client(self, param_tree) -> int:
+        # 4B value + 4B int32 index per kept coordinate
+        return sum(self._k(n) * 8 for n, _ in _leaf_sizes(param_tree))

@@ -60,6 +60,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import fusion as fusion_lib
 from repro.fl import attacks as attacks_lib
+from repro.fl import codec as codec_lib
 from repro.fl import methods as methods_lib
 from repro.fl import robust as robust_lib
 from repro.fl.methods import FedMethod, MethodContext
@@ -85,6 +86,44 @@ def resolve_use_kernel(use_kernel: bool | None, mesh) -> bool:
     return bool(use_kernel) and (mesh is None or mesh.size == 1)
 
 
+def resolve_compute_dtype(compute_dtype, method: FedMethod):
+    """The engine's mixed-precision decision — THE single copy of the
+    eligibility rule (FLConfig validation and make_round_engine both call
+    it): ``"float32"``/None keeps the storage dtype (the bit-identical
+    default); ``"bfloat16"`` returns jnp.bfloat16 for the LOCAL phase
+    (params, batches, and the broadcast global are downcast after the
+    round's broadcast, and the trained params are cast back to the
+    storage dtype BEFORE fusion — the fusion accumulators stay fp32,
+    DESIGN.md §15). Refused for methods without
+    ``FedMethod.mixed_precision``: per-client state would silently
+    round-trip through bf16 across rounds, and host fusion never sees
+    the fp32 accumulation."""
+    if compute_dtype in (None, "", "float32"):
+        return None
+    if compute_dtype != "bfloat16":
+        raise ValueError(
+            f"unknown compute_dtype {compute_dtype!r}; choose 'float32' "
+            "or 'bfloat16'")
+    if not method.mixed_precision:
+        raise ValueError(
+            f"{method.name} does not support a bfloat16 local phase "
+            "(FedMethod.mixed_precision): the downcast happens at the "
+            "round boundary, so the method must be client-stateless and "
+            "fuse on the device where the fp32 accumulators live")
+    return jnp.bfloat16
+
+
+def resolve_local_unroll(cfg, local_steps: int) -> int:
+    """Effective scan-unroll of the local phase: ``cfg.local_unroll``
+    clamped to the step count (an unroll beyond the scan length buys
+    nothing and jax rejects it). 1 — the default — is the seed scan, the
+    bit-identical program; unrolling batches dispatches without changing
+    the step arithmetic, though XLA may refuse elementwise chains across
+    the unrolled steps (equivalence is pinned at tolerance, not
+    bit-exactly — tests/test_engine.py)."""
+    return max(1, min(int(getattr(cfg, "local_unroll", 1)), local_steps))
+
+
 def make_local_phase(task, cfg, opt: Optimizer,
                      method: FedMethod | None = None) -> Callable:
     """(stacked, batches, global_params) -> stacked after the local phase:
@@ -97,12 +136,14 @@ def make_local_phase(task, cfg, opt: Optimizer,
             f"{meth.name} threads per-client state through its local "
             "phase; use make_round_engine (round_fn carries the state) "
             "instead of the stateless make_local_phase reference")
+    steps = cfg.local_epochs * cfg.steps_per_epoch
     ctx = MethodContext(task=task, cfg=cfg, population=cfg.population,
                         cohort_size=cfg.cohort_size,
-                        local_steps=cfg.local_epochs * cfg.steps_per_epoch,
+                        local_steps=steps,
                         opt=opt, weights=None, raw_weights=None,
                         group_axes=None, group_weights=None,
-                        use_kernel=False)
+                        use_kernel=False,
+                        local_unroll=resolve_local_unroll(cfg, steps))
 
     def one_client(params, batches, global_params):
         params, _ = meth.client_update(params, batches, global_params,
@@ -233,6 +274,7 @@ class RoundEngine:
 
 def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
                       use_kernel: bool | None = None,
+                      use_local_kernel: bool = False,
                       method: FedMethod | None = None) -> RoundEngine:
     """Build the engine for (task, cfg, method) at width cfg.cohort_size.
 
@@ -244,8 +286,20 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
     to one all-reduce (the kernel fast path is a single-host optimization;
     a 1-device mesh keeps the caller's choice so single-host dry-run
     records reflect the kernel path).
+    use_local_kernel: route the default client_update's optimizer tail
+    through the fused Pallas ``local_step`` kernel (DESIGN.md §15);
+    silently a no-op for methods without ``fused_local_step`` (their
+    client_update/local_opt overrides never reach the shared tail).
     method: an explicit FedMethod instance; default resolves
-    ``methods.get(cfg.method)`` from the registry."""
+    ``methods.get(cfg.method)`` from the registry.
+
+    cfg additionally carries the §15 performance knobs, every one
+    defaulting to the bit-identical seed behavior: ``compute_dtype``
+    (``resolve_compute_dtype`` — bf16 local phase, fp32 fusion),
+    ``codec`` (``fl/codec.py`` — decode-then-fuse uplink compression,
+    ``check_codec_support`` refuses ineligible methods and lossy codecs
+    under reducing robust rules), and ``local_unroll``
+    (``resolve_local_unroll`` — batched local-step dispatch)."""
     meth = method if method is not None else methods_lib.get(cfg.method)
     if meth.host_fusion and (
             type(meth).init_server_state is not FedMethod.init_server_state
@@ -279,14 +333,26 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
             rule = None
         elif use_kernel and rule.reduces:
             use_kernel = False   # sort-based reductions have no kernel path
+    # §15 performance knobs, resolved through THE single-copy rules so
+    # direct engine drives hit the same refusals as FLConfig validation
+    cdtype = resolve_compute_dtype(getattr(cfg, "compute_dtype", None),
+                                   meth)
+    codec = None
+    if getattr(cfg, "codec", None):
+        codec = codec_lib.parse_codec(cfg.codec)
+        codec_lib.check_codec_support(meth, codec, rule)
+    steps = cfg.local_epochs * cfg.steps_per_epoch
+    use_local_kernel = bool(use_local_kernel) and meth.fused_local_step
     ctx = MethodContext(task=task, cfg=cfg, population=cfg.population,
                         cohort_size=n,
-                        local_steps=cfg.local_epochs * cfg.steps_per_epoch,
+                        local_steps=steps,
                         opt=opt, weights=None, raw_weights=None,
                         group_axes=ga, group_weights=None,
                         use_kernel=use_kernel,
                         robust=rule if (rule is not None and rule.reduces)
-                        else None)
+                        else None,
+                        local_unroll=resolve_local_unroll(cfg, steps),
+                        use_local_kernel=use_local_kernel)
     meth.check(ctx)
 
     def init_server_state(global_params):
@@ -300,6 +366,12 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
         return {"server": init_server_state(global_params),
                 "clients": init_client_states(global_params, n)}
 
+    def _to_compute(t):
+        # bf16 local phase (§15): downcast every float leaf, keep ints
+        return jax.tree_util.tree_map(
+            lambda l: l.astype(cdtype)
+            if jnp.issubdtype(l.dtype, jnp.floating) else l, t)
+
     def local_and_fuse(clients_state, server_state, global_params, batches,
                        ctx_r, malicious):
         """The shared cohort-tile body: broadcast -> vmapped local phase
@@ -307,7 +379,15 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
         compile the identical per-tile program). ``malicious`` is the
         traced (presence row, round key) pair when a model-poisoning
         attack is configured, else None — an empty pytree, so honest
-        configs lower the identical program."""
+        configs lower the identical program.
+
+        The §15 knobs slot in at the round boundaries: ``cdtype`` casts
+        the broadcast params/batches down for the local phase and the
+        trained params back to storage dtype before fusion (the fusion
+        accumulators stay fp32); ``codec`` round-trips the stacked
+        params through the uplink encode/decode against the round's
+        global BEFORE any robust pre-step — the server defends against
+        what it actually received."""
         stacked = fusion_lib.broadcast_global(global_params, n)
         if mesh is not None:
             constrain = lambda t: jax.lax.with_sharding_constraint(  # noqa: E731
@@ -315,13 +395,18 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
                     lambda l: _client_sharding(mesh, l.ndim), t))
             stacked = constrain(stacked)
             clients_state = constrain(clients_state)
+        gp_local = global_params
+        if cdtype is not None:
+            stacked = _to_compute(stacked)
+            batches = _to_compute(batches)
+            gp_local = _to_compute(global_params)
         if attack is not None and malicious is not None:
             row, key = malicious
             keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
                 key, jnp.arange(n))
 
             def one(p, b, cs, m, k):
-                p2, cs2 = meth.client_update(p, b, global_params, cs,
+                p2, cs2 = meth.client_update(p, b, gp_local, cs,
                                              server_state, ctx_r)
                 return attack.poison_update(p2, global_params, m, k), cs2
 
@@ -330,8 +415,13 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
         else:
             stacked, new_clients = jax.vmap(
                 lambda p, b, cs: meth.client_update(
-                    p, b, global_params, cs, server_state, ctx_r),
+                    p, b, gp_local, cs, server_state, ctx_r),
                 in_axes=(0, 0, 0))(stacked, batches, clients_state)
+        if cdtype is not None:
+            stacked = jax.tree_util.tree_map(
+                lambda l, g: l.astype(g.dtype), stacked, global_params)
+        if codec is not None:
+            stacked = codec.roundtrip(stacked, global_params)
         if rule is not None and rule.has_pre:
             stacked = rule.pre(stacked, global_params)
         fused = meth.fuse(stacked, global_params, ctx_r)
@@ -403,11 +493,16 @@ def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int,
     ``ctx.local_steps`` — which method numerics read (scaffold's K*lr,
     fednova's tau) — equals the ``local_steps`` the lowered round scans.
     The per-round cohort weights lower as a replicated (cohort_size,)
-    f32 argument; a model-poisoning cfg.attack adds the replicated
-    malicious-presence row + round-key specs (honest configs pass None —
-    an empty pytree, so their lowering is unchanged). Returns the jax
-    ``Lowered`` for
-    ``round_fn(state_specs, global_specs, batch_specs, w_spec, None,
+    f32 argument; ``uses_groups`` methods additionally lower a
+    replicated (cohort_size, n_groups) f32 group-weights argument — the
+    presence rows fl/runtime.py passes every round, so the dry-run gate
+    covers the presence-weighted fusion program rather than the
+    unweighted special case (lowering gw=None used to compile a round
+    the sampled-participation path never runs). A model-poisoning
+    cfg.attack adds the replicated malicious-presence row + round-key
+    specs (honest configs pass None — an empty pytree, so their lowering
+    is unchanged). Returns the jax ``Lowered`` for
+    ``round_fn(state_specs, global_specs, batch_specs, w_spec, gw_spec,
     mal_specs)``.
     """
     cfg = dataclasses.replace(cfg, local_epochs=1,
@@ -439,6 +534,14 @@ def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int,
     }
     wspec = jax.ShapeDtypeStruct((n,), jnp.float32,
                                  sharding=NamedSharding(mesh, P()))
+    gwspec = None
+    if engine.method.uses_groups:
+        gaxes = [g for g in jax.tree_util.tree_leaves(
+                     task.group_axes_fn(param_shapes),
+                     is_leaf=lambda x: isinstance(x, fusion_lib.GroupAxis))
+                 if isinstance(g, fusion_lib.GroupAxis)]
+        gwspec = jax.ShapeDtypeStruct((n, gaxes[0].n_groups), jnp.float32,
+                                      sharding=NamedSharding(mesh, P()))
     mspec = None
     if engine.attack is not None:
         kshape = jax.eval_shape(lambda: jax.random.PRNGKey(0))
@@ -447,7 +550,7 @@ def lower_round(task, cfg, mesh, batch_elems: dict, *, local_steps: int,
                  jax.ShapeDtypeStruct(kshape.shape, kshape.dtype,
                                       sharding=NamedSharding(mesh, P())))
     with mesh:      # jax 0.4.x: Mesh is the context manager
-        return engine.round_fn.lower(sspecs, gspecs, bspecs, wspec, None,
+        return engine.round_fn.lower(sspecs, gspecs, bspecs, wspec, gwspec,
                                      mspec)
 
 

@@ -78,6 +78,13 @@ class MethodContext:
     group_weights: jnp.ndarray | None
     use_kernel: bool
     robust: Any = None         # reducing RobustRule (fl/robust.py) or None
+    local_unroll: int = 1      # scan-unroll of the local phase (§15):
+    #                            batches this many optimizer steps into one
+    #                            dispatch; 1 = the seed scan, bit-identical
+    use_local_kernel: bool = False  # route the default client_update's
+    #                            optimizer tail through the fused Pallas
+    #                            local_step kernel (fused_local_step
+    #                            methods only; DESIGN.md §15)
 
 
 class FedMethod:
@@ -141,6 +148,48 @@ class FedMethod:
         core/fusion.py in a way this flag doesn't capture."""
         return not self.host_fusion
 
+    @property
+    def mixed_precision(self) -> bool:
+        """Whether the engine may run this method's LOCAL phase in bf16
+        with fp32 fusion accumulators (``FLConfig.compute_dtype``,
+        DESIGN.md §15): the cast happens at the round boundary — bf16
+        in after broadcast, fp32 back before fuse — so the method must
+        be stateless on the client (per-client state would silently
+        round-trip through bf16 across rounds) and fuse on the device
+        (the fp32 accumulation IS the fuse; host matching never sees
+        it). That is exactly the tier-fusion eligibility; override only
+        for a method whose numerics break under a bf16 local phase in a
+        way these flags don't capture."""
+        return self.tier_fusion
+
+    @property
+    def uplink_codec(self) -> bool:
+        """Whether an ``UplinkCodec`` (fl/codec.py, DESIGN.md §15) may
+        compress this method's uplink: decode-then-fuse reconstructs
+        the client deltas on the device right before the fuse, so the
+        fuse must be a device-side aggregation of the stacked updates
+        (host_fusion never fuses on device) and clients must carry no
+        state that assumes the server saw their exact params
+        (scaffold's control variates do). That is exactly the
+        tier-fusion eligibility; override only for a method whose fuse
+        reads the stacked params in a way decode-then-fuse doesn't
+        preserve."""
+        return self.tier_fusion
+
+    @property
+    def fused_local_step(self) -> bool:
+        """Whether the fused Pallas ``local_step`` kernel
+        (kernels/local_step.py, DESIGN.md §15) may drive this method's
+        optimizer tail: the kernel IS momentum-SGD on the raveled
+        params, so the method must run the DEFAULT client_update (the
+        scan the kernel route replaces step-for-step) with the DEFAULT
+        local optimizer (scaffold pins momentum-free SGD inside its own
+        client_update and never routes here). Derived from the actual
+        overrides so a new method that customizes either hook opts out
+        automatically."""
+        return (type(self).client_update is FedMethod.client_update
+                and type(self).local_opt is FedMethod.local_opt)
+
     def local_opt(self, cfg):
         """The optimizer driving the local phase. Default: the config's
         SGD(+momentum); methods whose analysis assumes a specific local
@@ -199,13 +248,23 @@ class FedMethod:
                       server_state, ctx: MethodContext):
         """One client's local phase: scan ``local_steps`` optimizer steps
         over ``batches``. Returns (new_params, new_client_state). The
-        engine vmaps this over the stacked client axis."""
+        engine vmaps this over the stacked client axis.
+
+        ``ctx.local_unroll`` batches that many steps into one dispatch
+        (lax.scan unroll; 1 = the seed scan, the identical program).
+        ``ctx.use_local_kernel`` routes the optimizer tail through the
+        fused Pallas ``local_step`` kernel for ``fused_local_step``
+        methods (DESIGN.md §15)."""
         opt = ctx.opt
 
         def loss(p, batch):
             base = ctx.task.loss_fn(p, batch)
             term = self.local_loss_term(p, batch, global_params, ctx)
             return base if term is None else base + term
+
+        if ctx.use_local_kernel and self.fused_local_step:
+            return self._kernel_client_update(params, batches, loss,
+                                              client_state, ctx)
 
         def step(carry, batch):
             p, s, i = carry
@@ -215,8 +274,37 @@ class FedMethod:
 
         (params, _, _), _ = jax.lax.scan(
             step, (params, opt.init(params), jnp.zeros((), jnp.int32)),
-            batches)
+            batches, unroll=ctx.local_unroll)
         return params, client_state
+
+    def _kernel_client_update(self, params, batches, loss, client_state,
+                              ctx: MethodContext):
+        """Kernel-backed local phase: ravel the params ONCE, scan a flat
+        (params, velocity) carry, and fuse each step's momentum-SGD tail
+        into one Pallas pass (kernels/local_step.py) instead of the
+        optimizer's per-leaf elementwise chain. Exactly momentum-SGD with
+        the config's fixed lr — ``fused_local_step`` guards that the
+        method runs the default optimizer, so this is a route, not a
+        different algorithm. Velocity starts at zeros like sgd.init (the
+        mu == 0 kernel reduces to p - lr*g, matching the stateless SGD
+        branch)."""
+        from jax.flatten_util import ravel_pytree
+
+        from repro.kernels import ops as kops
+
+        flat, unravel = ravel_pytree(params)
+        lr, mu = float(ctx.cfg.lr), float(ctx.cfg.momentum)
+
+        def step(carry, batch):
+            p, v = carry
+            g = jax.grad(lambda q: loss(unravel(q), batch))(p)
+            p, v = kops.local_step(p, v, g, lr=lr, mu=mu)
+            return (p, v), None
+
+        (flat, _), _ = jax.lax.scan(
+            step, (flat, jnp.zeros_like(flat)), batches,
+            unroll=ctx.local_unroll)
+        return unravel(flat), client_state
 
     # -- aggregation --------------------------------------------------------
 
@@ -380,7 +468,7 @@ class Scaffold(FedMethod):
 
         (new_params, _, _), _ = jax.lax.scan(
             step, (params, opt.init(params), jnp.zeros((), jnp.int32)),
-            batches)
+            batches, unroll=ctx.local_unroll)
         # option-II control update: c_i+ = c_i - c + (x - y_i) / (K * lr)
         k_lr = ctx.local_steps * ctx.cfg.lr
         new_ci = jax.tree_util.tree_map(
@@ -460,6 +548,24 @@ class FedAdam(FedMethod):
     name = "fedadam"
     summary = "server Adam over round pseudo-gradients (FedOpt)"
     b1, b2, eps = 0.9, 0.99, 1e-3
+
+    @property
+    def mixed_precision(self) -> bool:
+        """False despite tier fusion: the server step divides the round
+        pseudo-gradient by sqrt(v) + eps, so on low-|delta| coordinates
+        (v near zero) a bf16 uplink perturbation flips the SIGN of an
+        O(server_lr) adaptive step — there is no bf16-resolution
+        tolerance pin, only divergence (measured ~0.8 max-leaf diff on
+        the first round). Exact uplinks only."""
+        return False
+
+    @property
+    def uplink_codec(self) -> bool:
+        """False for the same reason as mixed_precision: the adaptive
+        normalization amplifies any lossy-uplink reconstruction error
+        (int8's scale/2, topk's dropped support) into sign-flipped
+        server steps. Exact uplinks only."""
+        return False
 
     def init_server_state(self, params, ctx):
         z = jax.tree_util.tree_map(jnp.zeros_like, params)

@@ -114,6 +114,17 @@ class FLConfig:
     attack: str | None = None
     attack_fraction: float = 0.0
     robust: str | None = None
+    # engine performance knobs (DESIGN.md §15), each defaulting to the
+    # bit-identical seed behavior: compute_dtype runs the LOCAL phase in
+    # bf16 with fp32 fusion accumulators ("float32" | "bfloat16",
+    # mixed_precision methods only); codec compresses the uplink through
+    # fl/codec.py's decode-then-fuse ("identity" | "int8" | "topk(f)",
+    # uplink_codec methods only; reducing robust rules refuse lossy
+    # codecs); local_unroll batches that many local optimizer steps into
+    # one dispatch (lax.scan unroll — same arithmetic, fewer dispatches).
+    compute_dtype: str = "float32"
+    codec: str | None = None
+    local_unroll: int = 1
 
     def __post_init__(self):
         if self.method not in methods_lib.available():
@@ -227,6 +238,49 @@ class FLConfig:
                     "per-round malicious row / robust reduction "
                     "(DESIGN.md §14) has no buffered form yet; run "
                     "mode='sync'")
+        # §15 engine performance knobs: resolve through THE single-copy
+        # eligibility rules so a bad config fails at construction, not
+        # deep inside engine building
+        from repro.fl.engine import resolve_compute_dtype
+        resolve_compute_dtype(self.compute_dtype,
+                              methods_lib.get(self.method))
+        if (not isinstance(self.local_unroll, int)
+                or isinstance(self.local_unroll, bool)
+                or self.local_unroll <= 0):
+            raise ValueError(
+                f"FLConfig.local_unroll must be a positive int (local "
+                f"optimizer steps batched per dispatch), got "
+                f"{self.local_unroll!r}")
+        if not self.codec:
+            object.__setattr__(self, "codec", None)
+        else:
+            from repro.fl import codec as codec_lib
+            from repro.fl import robust as robust_lib
+            c = codec_lib.parse_codec(self.codec)
+            rule = None
+            if self.robust:
+                rule = robust_lib.parse_robust(self.robust)
+                if not rule.active:
+                    rule = None
+            codec_lib.check_codec_support(methods_lib.get(self.method),
+                                          c, rule)
+        if self.compute_dtype != "float32" or self.codec is not None:
+            knob = ("compute_dtype" if self.compute_dtype != "float32"
+                    else "codec")
+            if self.tiers is not None:
+                raise ValueError(
+                    f"FLConfig.{knob} and tiers are mutually exclusive "
+                    "for now: tiered rounds fuse width-sliced sub-model "
+                    "tiles (DESIGN.md §11) whose per-tier byte/precision "
+                    "accounting the §15 knobs don't define yet; drop the "
+                    "tiers or the knob")
+            if self.mode == "async":
+                raise ValueError(
+                    f"FLConfig.{knob} and mode='async' are mutually "
+                    "exclusive for now: the buffered-async tile/event "
+                    "split (DESIGN.md §12) implements neither the round-"
+                    "boundary dtype cast nor the decode-then-fuse "
+                    "round-trip; run mode='sync'")
 
 
 @dataclasses.dataclass
@@ -445,7 +499,8 @@ def run_sampled_round(engine, pop: Population, method, server_state,
 def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
                   test_batches, *, latency: str = "zero", log=None,
                   class_counts=None, group_spec=None, mesh=None,
-                  use_kernel=None, checkpoint_dir=None,
+                  use_kernel=None, use_local_kernel: bool = False,
+                  checkpoint_dir=None,
                   checkpoint_every: int = 1,
                   resume: bool = False) -> dict:
     """parts: list of cfg.population per-client index arrays;
@@ -460,6 +515,9 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
     mesh: optional launch/mesh.py mesh — shards the cohort axis over
     "data".
     use_kernel: force the Pallas fusion fast path on/off (None = default).
+    use_local_kernel: route the default client_update's optimizer tail
+    through the fused Pallas ``local_step`` kernel (DESIGN.md §15;
+    no-op for methods without ``fused_local_step``).
 
     Returns history {round, acc, wall, wall_total, participants,
     final_params} — plus, when the task carries ``predict_fn`` and
@@ -579,7 +637,9 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
         engine = tiered.full
     else:
         engine = make_round_engine(task, cfg, global_params, mesh=mesh,
-                                   use_kernel=use_kernel, method=method)
+                                   use_kernel=use_kernel,
+                                   use_local_kernel=use_local_kernel,
+                                   method=method)
     server_state = engine.init_server_state(global_params)
     # round-0 per-client state: ONE row broadcast at population width by
     # the store (the in-memory store builds the historical stacked tree

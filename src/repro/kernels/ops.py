@@ -11,10 +11,19 @@ import jax.numpy as jnp
 
 from repro.kernels.feature_stats import feature_stats_kernel
 from repro.kernels.grouped_matmul import grouped_matmul_kernel
+from repro.kernels.local_step import local_step_kernel
 from repro.kernels.paired_fusion import paired_fusion_kernel
 from repro.kernels.ssd_update import ssd_update_kernel
 
-_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+def pallas_interpret() -> bool:
+    """Whether Pallas kernels run in interpret mode — THE single copy of
+    the rule, resolved PER CALL (never frozen at import: monkeypatched
+    tests and programmatic launchers set REPRO_PALLAS_COMPILE after this
+    module loads). ``fusion.default_use_kernel()`` reads the same env the
+    same way, so "compile for real" and "kernels on by default" flip
+    together."""
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
 def _pad_to(x, mult, axis):
@@ -47,7 +56,7 @@ def grouped_matmul(x, w, b=None, *, bm: int = 128, bn: int = 128,
     if np_:
         w = jnp.pad(w, ((0, 0), (0, 0), (0, np_)))
     y = grouped_matmul_kernel(xm, w, bm=bm, bn=bn, bk=bk,
-                              interpret=_INTERPRET)
+                              interpret=pallas_interpret())
     y = y.reshape(y.shape[0], g, n + np_)[:m0, :, :n]
     if b is not None:
         y = y + b
@@ -60,7 +69,8 @@ def feature_stats(a, grad, *, bi: int = 512, bb: int = 256):
     grad, _ = _pad_to(grad, bi, 1)
     a, _ = _pad_to(a, bb, 0)
     grad, _ = _pad_to(grad, bb, 0)
-    out = feature_stats_kernel(a, grad, bi=bi, bb=bb, interpret=_INTERPRET)
+    out = feature_stats_kernel(a, grad, bi=bi, bb=bb,
+                               interpret=pallas_interpret())
     return out[0, :i0]
 
 
@@ -76,8 +86,25 @@ def ssd_update(h, x, dt, a_log, b, c, d_skip, *, bh: int = 8):
         a_log = jnp.pad(a_log, (0, pad))
         d_skip = jnp.pad(d_skip, (0, pad))
     hn, y = ssd_update_kernel(h, x, dt, a_log, b, c, d_skip, bh=bh,
-                              interpret=_INTERPRET)
+                              interpret=pallas_interpret())
     return hn[:, :hh], y[:, :hh]
+
+
+def local_step(params, vel, grads, *, lr: float, mu: float,
+               bm: int = 1024):
+    """Fused momentum-SGD step on FLAT (M,) views: v' = mu*v + g,
+    p' = p - lr*v' in one fp32 pass (kernels/local_step.py). ``lr``/``mu``
+    are static — the caller (methods.py's kernel-backed client_update)
+    bakes the config values in. Pads to a lane-aligned tile like
+    ``paired_fusion`` and slices back."""
+    m0 = params.shape[0]
+    bm = min(bm, -(-m0 // 128) * 128)       # lane-aligned, no 1024-padding
+    p, _ = _pad_to(params.reshape(1, -1), bm, 1)
+    v, _ = _pad_to(vel.reshape(1, -1), bm, 1)
+    g, _ = _pad_to(grads.reshape(1, -1), bm, 1)
+    p2, v2 = local_step_kernel(p, v, g, lr=float(lr), mu=float(mu), bm=bm,
+                               interpret=pallas_interpret())
+    return p2[0, :m0], v2[0, :m0]
 
 
 def paired_fusion(stacked, weights, *, group_axis=None, perms=None,
@@ -107,5 +134,6 @@ def paired_fusion(stacked, weights, *, group_axis=None, perms=None,
     flat, _ = _pad_to(flat, bm, 1)
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.sum(w)
-    out = paired_fusion_kernel(flat, w, bm=bm, interpret=_INTERPRET)
+    out = paired_fusion_kernel(flat, w, bm=bm,
+                               interpret=pallas_interpret())
     return out[0, :m0].reshape(stacked.shape[1:])

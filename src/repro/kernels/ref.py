@@ -32,6 +32,14 @@ def ssd_update_ref(h, x, dt, a_log, b, c, d_skip):
     return hnew.astype(h.dtype), y.astype(x.dtype)
 
 
+def local_step_ref(p, v, g, lr, mu):
+    """Fused momentum-SGD step oracle: v' = mu*v + g; p' = p - lr*v'
+    (fp32 internal, storage dtypes preserved)."""
+    v2 = mu * v.astype(jnp.float32) + g.astype(jnp.float32)
+    p2 = p.astype(jnp.float32) - lr * v2
+    return p2.astype(p.dtype), v2.astype(v.dtype)
+
+
 def paired_fusion_ref(stacked, weights):
     """stacked: (N, M); weights: (N,) -> (M,) = sum_n w_n x_n (fp32 acc)."""
     w = weights.astype(jnp.float32)[:, None]

@@ -25,7 +25,11 @@ matrix (fl/capacity.py, DESIGN.md §11) lowers alongside by default
 bytes. So does an adversarial robust-fusion matrix (``ROBUST_MATRIX``,
 ``--no-robust-events`` to skip): one sign_flip-poisoned round per
 fusion family under a reducing robust rule (fl/attacks.py +
-fl/robust.py, DESIGN.md §14). Every ok record also stamps its measured
+fl/robust.py, DESIGN.md §14). And a §15 fast-path matrix
+(``FAST_MATRIX``, ``--no-fast-events`` to skip): one bf16 +
+compressed-uplink round per fusion family, stamping the codec's
+per-client uplink bytes against the dense uplink. Every ok record also
+stamps its measured
 ``wall_s`` plus an auto ``max_wall_s`` budget for check_drift's
 non-blocking wall-clock WARN row.
 
@@ -430,6 +434,92 @@ def run_robust_matrix(mesh, mesh_name: str, *, methods=("fedavg", "fed2"),
             for m, rule in ROBUST_MATRIX if m in methods]
 
 
+# fast-path placements (DESIGN.md §15): one bf16 + compressed-uplink
+# round per fusion family — int8 quantized deltas over fedavg's flat
+# average, top-k sketched deltas over fed2's presence-weighted paired
+# average. Each record carries the codec's per-client uplink bytes next
+# to the dense uplink, so the compression claim is a committed number
+# the drift gate holds us to, not prose.
+FAST_MATRIX = (("fedavg", "int8"), ("fed2", "topk(0.05)"))
+
+
+def run_fast_one(method: str, codec_spec: str, mesh, mesh_name: str, *,
+                 clients: int, local_steps: int, batch: int,
+                 outdir: str, use_kernel=None, verbose: bool = True) -> dict:
+    """Lower+compile ONE §15 fast-path round: the bf16 local phase (fp32
+    fusion accumulators) with the uplink codec's decode-then-fuse
+    round-trip traced between the local phase and the fuse. Stamps the
+    codec's ``uplink_bytes`` per client against the dense
+    ``full_params_bytes`` (``uplink_frac`` = their ratio) — the
+    compressed-uplink economics, alongside the usual lowering stats."""
+    from repro.fl import codec as codec_lib
+
+    cname = codec_spec.split("(", 1)[0].strip()
+    tag = f"fl_fast_{method}_{cname}_{mesh_name}"
+    rec = {"kind": "fl_fast", "method": method, "family": "cnn",
+           "mesh": mesh_name, "population": clients,
+           "cohort_size": clients, "local_steps": local_steps,
+           "batch": batch, "compute_dtype": "bfloat16",
+           "codec": codec_spec}
+    try:
+        kind = "host" if mesh_name == "1x1" else "pod"
+        task, arch = _cnn_case(method, kind)
+        fl = FLConfig(population=clients, method=method,
+                      compute_dtype="bfloat16", codec=codec_spec)
+        t0 = time.time()
+        lowered = lower_round(task, fl, mesh,
+                              _batch_elems("cnn", batch, 0),
+                              local_steps=local_steps,
+                              use_kernel=use_kernel)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        colls = collective_bytes(compiled.as_text())
+        import jax
+        shapes = jax.eval_shape(task.init_fn, jax.random.PRNGKey(0))
+        codec = codec_lib.parse_codec(codec_spec)
+        dense = stacked_param_bytes(task, 1)
+        up = codec.bytes_per_client(shapes)
+        rec.update(
+            status="ok", arch=arch,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops=_flops(compiled),
+            use_kernel=resolve_use_kernel(use_kernel, mesh),
+            params_bytes=up,
+            full_params_bytes=dense,
+            uplink_bytes=up,
+            uplink_frac=round(up / dense, 4),
+            memory={"temp_bytes": mem.temp_size_in_bytes,
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes},
+            collectives=colls)
+        _stamp_wall(rec, t_lower, t_compile)
+        if verbose:
+            print(f"[ok]   {tag}: lower {t_lower:.1f}s compile "
+                  f"{t_compile:.1f}s uplink {rec['uplink_frac']:.3f}x "
+                  f"dense")
+    except Exception as e:  # noqa: BLE001 — record, keep the matrix going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    _write(outdir, tag, rec)
+    return rec
+
+
+def run_fast_matrix(mesh, mesh_name: str, *, methods=("fedavg", "fed2"),
+                    clients: int, local_steps: int, batch: int,
+                    outdir: str, use_kernel=None,
+                    verbose: bool = True) -> list:
+    return [run_fast_one(m, spec, mesh, mesh_name, clients=clients,
+                         local_steps=local_steps, batch=batch,
+                         outdir=outdir, use_kernel=use_kernel,
+                         verbose=verbose)
+            for m, spec in FAST_MATRIX if m in methods]
+
+
 DEFAULT_OUT = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "..", "..",
     "benchmarks", "artifacts_perf"))      # cwd-independent, like flbench
@@ -441,6 +531,7 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                cohort_size=None, sampler: str = "full",
                use_kernel=None, tiers: bool = True,
                async_events: bool = True, robust_events: bool = True,
+               fast_events: bool = True,
                verbose: bool = True) -> list:
     methods = methods_lib.available() if methods is None else methods
     bad = [m for m in methods if m not in methods_lib.available()] + \
@@ -480,6 +571,12 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                                   clients=clients, local_steps=local_steps,
                                   batch=batch, outdir=outdir,
                                   verbose=verbose)
+    if fast_events and "cnn" in families:
+        fast_methods = [m for m in ("fedavg", "fed2") if m in methods]
+        recs += run_fast_matrix(mesh, mesh_name, methods=fast_methods,
+                                clients=clients, local_steps=local_steps,
+                                batch=batch, outdir=outdir,
+                                use_kernel=use_kernel, verbose=verbose)
     return recs
 
 
@@ -526,6 +623,11 @@ def main():
                          "fedavg x coordinate_median / fed2 x "
                          "trimmed_mean, cnn; fl/attacks.py + "
                          "fl/robust.py)")
+    ap.add_argument("--fast-events",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="also lower the §15 fast-path round matrix "
+                         "(bf16 local phase + uplink codec: fedavg x "
+                         "int8 / fed2 x topk, cnn; fl/codec.py)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
 
@@ -540,7 +642,8 @@ def main():
                       cohort_size=args.cohort_size, sampler=args.sampler,
                       use_kernel=args.use_kernel, tiers=args.tiers,
                       async_events=args.async_events,
-                      robust_events=args.robust_events)
+                      robust_events=args.robust_events,
+                      fast_events=args.fast_events)
     n_fail = sum(r["status"] == "error" for r in recs)
     print(f"done; {len(recs)} records, {n_fail} failures")
     raise SystemExit(1 if n_fail else 0)

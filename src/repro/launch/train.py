@@ -138,15 +138,20 @@ def run_fl(args):
                   store=args.store, chunk_size=args.chunk_size,
                   attack=args.attack or None,
                   attack_fraction=args.attack_fraction,
-                  robust=args.robust or None)
+                  robust=args.robust or None,
+                  compute_dtype=args.compute_dtype,
+                  codec=args.codec or None,
+                  local_unroll=args.local_unroll)
     h = run_federated(cnn_task(cfg), fl, parts, get_batch, test_batches,
-                      latency=args.latency, log=print)
+                      latency=args.latency, log=print,
+                      use_local_kernel=args.use_local_kernel)
     print("final acc:", h["acc"][-1])
     return h
 
 
 def main():
     from repro.fl import attacks as attacks_lib
+    from repro.fl import codec as codec_lib
     from repro.fl import methods as methods_lib
     from repro.fl import population as population_lib
     from repro.fl import robust as robust_lib
@@ -218,6 +223,22 @@ def main():
                          "e.g. coordinate_median or trimmed_mean(0.25) "
                          "(fl/robust.py registry: "
                          + ", ".join(robust_lib.available()) + ")")
+    ap.add_argument("--compute-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="fl mode: local-phase compute dtype; bfloat16 "
+                         "casts at the round boundary and fuses in fp32 "
+                         "(DESIGN.md §15; tier-fusion methods only)")
+    ap.add_argument("--codec", default="",
+                    help="fl mode: uplink codec as name[(param)], e.g. "
+                         "'int8' or 'topk(0.05)' (fl/codec.py registry: "
+                         + ", ".join(codec_lib.available()) + ")")
+    ap.add_argument("--local-unroll", type=int, default=1,
+                    help="fl mode: batch this many local SGD steps into "
+                         "one dispatch (scan unroll; 1 = seed-identical)")
+    ap.add_argument("--use-local-kernel", action="store_true",
+                    help="fl mode: route the local phase through the "
+                         "fused Pallas local_step kernel (methods on "
+                         "the default client_update/local_opt only)")
     ap.add_argument("--classes-per-node", type=int, default=5)
     ap.add_argument("--dirichlet", type=float, default=0.0)
     ap.add_argument("--local-epochs", type=int, default=1)
@@ -251,6 +272,11 @@ def main():
                               or args.robust):
         ap.error("--attack/--attack-fraction/--robust are only supported "
                  "with --mode fl")
+    if args.mode != "fl" and (args.compute_dtype != "float32"
+                              or args.codec or args.local_unroll != 1
+                              or args.use_local_kernel):
+        ap.error("--compute-dtype/--codec/--local-unroll/"
+                 "--use-local-kernel are only supported with --mode fl")
     (run_lm if args.mode == "lm" else run_fl)(args)
 
 

@@ -1,0 +1,198 @@
+"""Uplink codecs (fl/codec.py, DESIGN.md §15): registry + spec grammar,
+round-trip contracts per codec, uplink-byte accounting, and the
+eligibility refusals (THE single copy in check_codec_support)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import codec as codec_lib
+from repro.fl import methods as methods_lib
+from repro.fl import robust as robust_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(n=3):
+    """A stacked (N, ...) client tree with mixed leaf shapes."""
+    return {"w": jax.random.normal(KEY, (n, 8, 5)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (n, 7)) * 0.1}
+
+
+def _global():
+    return {"w": jax.random.normal(jax.random.PRNGKey(2), (8, 5)),
+            "b": jax.random.normal(jax.random.PRNGKey(3), (7,)) * 0.1}
+
+
+# --------------------------------------------------------------------------
+# Registry + spec grammar
+# --------------------------------------------------------------------------
+
+
+def test_registry_and_available():
+    names = codec_lib.available()
+    assert names == tuple(sorted(names))
+    for n in ("identity", "int8", "topk"):
+        assert n in names
+        assert isinstance(codec_lib.get(n), codec_lib.UplinkCodec)
+
+
+def test_parse_codec_specs():
+    assert codec_lib.parse_codec("identity").name == "identity"
+    assert codec_lib.parse_codec("int8").name == "int8"
+    c = codec_lib.parse_codec("topk(0.25)")
+    assert c.name == "topk" and c.frac == 0.25
+    assert c.describe() == "topk(0.25)"
+    assert codec_lib.parse_codec(" topk ( 0.5 ) ").frac == 0.5
+
+
+@pytest.mark.parametrize("bad", ["", "nope", "topk(", "topk)3(",
+                                 "int8(1)(2)"])
+def test_parse_codec_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        codec_lib.parse_codec(bad)
+
+
+@pytest.mark.parametrize("frac", [0.0, -0.1, 1.5])
+def test_topk_frac_out_of_range(frac):
+    with pytest.raises(ValueError, match="topk codec fraction"):
+        codec_lib.TopKCodec(frac)
+
+
+# --------------------------------------------------------------------------
+# Round-trip contracts
+# --------------------------------------------------------------------------
+
+
+def test_identity_roundtrip_is_bit_identical():
+    """Identity must return the stacked tree UNTOUCHED — (y-x)+x is not
+    y in floats, so the contract is object-level passthrough."""
+    stacked, gp = _tree(), _global()
+    out = codec_lib.get("identity").roundtrip(stacked, gp)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(stacked)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_int8_error_bounded_by_half_scale():
+    stacked, gp = _tree(), _global()
+    c = codec_lib.get("int8")
+    out = c.roundtrip(stacked, gp)
+    for leaf, orig, g in zip(jax.tree_util.tree_leaves(out),
+                             jax.tree_util.tree_leaves(stacked),
+                             jax.tree_util.tree_leaves(gp)):
+        d = np.asarray(orig) - np.asarray(g)[None]
+        scale = np.abs(d).reshape(d.shape[0], -1).max(axis=1) / 127.0
+        err = np.abs(np.asarray(leaf) - np.asarray(orig))
+        bound = scale.reshape((-1,) + (1,) * (d.ndim - 1))
+        assert (err <= 0.5 * bound + 1e-6).all()
+
+
+def test_int8_zero_delta_is_exact():
+    """All-zero delta: the 0-amax scale guard must decode exact zeros,
+    not NaNs."""
+    gp = _global()
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (3,) + x.shape), gp)
+    out = codec_lib.get("int8").roundtrip(stacked, gp)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(stacked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_topk_exact_on_support_zero_off_it():
+    stacked, gp = _tree(), _global()
+    c = codec_lib.TopKCodec(0.3)
+    deltas = jax.tree_util.tree_map(
+        lambda y, x: y - x[None], stacked, gp)
+    dec = c.decode(c.encode(deltas))
+    for d, r in zip(jax.tree_util.tree_leaves(deltas),
+                    jax.tree_util.tree_leaves(dec)):
+        d, r = np.asarray(d), np.asarray(r)
+        n = d.shape[0]
+        k = c._k(int(np.prod(d.shape[1:])))
+        flat_d, flat_r = d.reshape(n, -1), r.reshape(n, -1)
+        for i in range(n):
+            kept = np.argsort(-np.abs(flat_d[i]))[:k]
+            np.testing.assert_allclose(flat_r[i][kept], flat_d[i][kept],
+                                       atol=1e-6)
+            mask = np.ones(flat_d.shape[1], bool)
+            mask[kept] = False
+            assert (flat_r[i][mask] == 0).all()
+
+
+def test_topk_full_fraction_is_lossless_on_deltas():
+    stacked, gp = _tree(), _global()
+    deltas = jax.tree_util.tree_map(lambda y, x: y - x[None], stacked, gp)
+    c = codec_lib.TopKCodec(1.0)
+    dec = c.decode(c.encode(deltas))
+    for a, b in zip(jax.tree_util.tree_leaves(dec),
+                    jax.tree_util.tree_leaves(deltas)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Uplink-byte accounting
+# --------------------------------------------------------------------------
+
+
+def test_bytes_per_client():
+    tree = {"w": jnp.zeros((8, 5)), "b": jnp.zeros((7,))}
+    dense = (40 + 7) * 4
+    assert codec_lib.get("identity").bytes_per_client(tree) == dense
+    assert codec_lib.get("int8").bytes_per_client(tree) == \
+        (40 * 1 + 4) + (7 * 1 + 4)
+    # topk(0.1): ceil(0.1*40)=4 and ceil(0.1*7)=1 coords at 8B each
+    assert codec_lib.TopKCodec(0.1).bytes_per_client(tree) == (4 + 1) * 8
+
+
+def test_bytes_per_client_accepts_eval_shape_structs():
+    tree = {"w": jax.ShapeDtypeStruct((8, 5), jnp.float32)}
+    assert codec_lib.get("identity").bytes_per_client(tree) == 160
+
+
+# --------------------------------------------------------------------------
+# Eligibility refusals (THE single copy: check_codec_support)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["fedma", "scaffold"])
+def test_ineligible_methods_refuse(method):
+    with pytest.raises(ValueError, match="does not support"):
+        codec_lib.check_codec_support(methods_lib.get(method),
+                                      codec_lib.get("int8"))
+
+
+def test_reducing_robust_refuses_lossy_codec():
+    rule = robust_lib.parse_robust("coordinate_median")
+    with pytest.raises(ValueError, match="lossy codec"):
+        codec_lib.check_codec_support(methods_lib.get("fedavg"),
+                                      codec_lib.get("int8"), rule)
+
+
+def test_reducing_robust_accepts_exact_identity():
+    rule = robust_lib.parse_robust("coordinate_median")
+    codec_lib.check_codec_support(methods_lib.get("fedavg"),
+                                  codec_lib.get("identity"), rule)
+
+
+def test_nonreducing_robust_accepts_lossy_codec():
+    rule = robust_lib.parse_robust("norm_clip(2.0)")
+    assert not rule.reduces
+    codec_lib.check_codec_support(methods_lib.get("fed2"),
+                                  codec_lib.get("int8"), rule)
+
+
+def test_uplink_codec_capability_tracks_tier_fusion():
+    """Eligibility derives from tier fusion, with one documented opt-out:
+    fedadam's adaptive server step amplifies uplink noise into
+    sign-flipped steps, so it refuses bf16 and codecs despite fusing on
+    device."""
+    for name in methods_lib.available():
+        m = methods_lib.get(name)
+        if name == "fedadam":
+            assert m.tier_fusion
+            assert not m.uplink_codec and not m.mixed_precision
+            continue
+        assert m.uplink_codec == m.tier_fusion
+        assert m.mixed_precision == m.tier_fusion

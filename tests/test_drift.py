@@ -207,3 +207,26 @@ def test_write_baseline_updates_committed(dirs):
     # and the gate is green again
     assert check_drift.main(["--fresh", str(fresh),
                              "--committed", str(committed)]) == 0
+
+
+def test_improvement_is_labelled_and_still_fails(dirs):
+    """The gate is symmetric: FEWER flops/bytes fails too, but the line
+    must say IMPROVEMENT so the fix (claim it: regenerate + commit the
+    baseline) is obvious, and a regression must NOT carry that label."""
+    fresh, committed = dirs
+    better = copy.deepcopy(_REC)
+    better["flops"] *= 0.5
+    better["collectives"]["all-reduce"]["bytes"] = 512
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", better)
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    reasons = {d: r for _, d, r in res["drift"]}
+    assert "IMPROVEMENT" in reasons["flops"]
+    assert "IMPROVEMENT" in reasons["collectives.all-reduce.bytes"]
+    assert check_drift.main(["--fresh", str(fresh),
+                             "--committed", str(committed)]) == 1
+
+    worse = copy.deepcopy(_REC)
+    worse["flops"] *= 2.0
+    _write(fresh, "dryrun_fl_round_fedavg_cnn_1x1.json", worse)
+    res = check_drift.compare_dirs(str(fresh), str(committed))
+    assert all("IMPROVEMENT" not in r for _, _, r in res["drift"])

@@ -129,6 +129,158 @@ def test_stacked_param_bytes():
     assert one > 0
 
 
+# --------------------------------------------------------------------------
+# §15: fused local phase (unroll + kernel route), bf16, uplink codecs
+# --------------------------------------------------------------------------
+
+from repro.fl import methods as methods_lib  # noqa: E402
+from repro.fl.engine import (resolve_compute_dtype,  # noqa: E402
+                             resolve_local_unroll)
+
+_MP_METHODS = [n for n in methods_lib.available()
+               if methods_lib.get(n).mixed_precision]
+
+
+def _fl15(method="fed2", rounds=2, **kw):
+    return FLConfig(population=3, rounds=rounds, local_epochs=1,
+                    steps_per_epoch=2, batch_size=8, lr=0.02, momentum=0.9,
+                    method=method, seed=0, **kw)
+
+
+def _run15(fl, **kw):
+    cfg = _cfg(fl.method)
+    parts = nxc_partition(_DS.labels, fl.population, 2, 4, seed=1)
+    return run_federated(cnn_task(cfg), fl, parts, _get_batch,
+                         _TEST_BATCHES, **kw)
+
+
+def _leafcmp(a, b, atol=None):
+    for la, lb in zip(jax.tree_util.tree_leaves(a["final_params"]),
+                      jax.tree_util.tree_leaves(b["final_params"])):
+        la = np.asarray(la, np.float32)
+        lb = np.asarray(lb, np.float32)
+        if atol is None:
+            np.testing.assert_array_equal(la, lb)
+        else:
+            np.testing.assert_allclose(la, lb, atol=atol)
+
+
+def test_resolve_local_unroll_clamps():
+    fl = _fl15(local_unroll=16)
+    assert resolve_local_unroll(fl, 2) == 2      # never past local steps
+    assert resolve_local_unroll(_fl15(), 2) == 1  # default untouched
+
+
+def test_resolve_compute_dtype():
+    meth = methods_lib.get("fedavg")
+    assert resolve_compute_dtype("float32", meth) is None
+    assert resolve_compute_dtype(None, meth) is None
+    assert resolve_compute_dtype("bfloat16", meth) == jnp.bfloat16
+    with pytest.raises(ValueError, match="unknown compute_dtype"):
+        resolve_compute_dtype("float16", meth)
+    with pytest.raises(ValueError, match="bfloat16 local phase"):
+        resolve_compute_dtype("bfloat16", methods_lib.get("scaffold"))
+
+
+def test_local_unroll_matches_seed_scan_at_tolerance():
+    """unroll=2 batches both local steps into one dispatch; XLA may
+    re-associate the elementwise chain, so equivalence is pinned at
+    tolerance (unroll=1 stays the seed program bit-for-bit)."""
+    base = _run15(_fl15("fed2"))
+    unrolled = _run15(_fl15("fed2", local_unroll=2))
+    _leafcmp(base, unrolled, atol=5e-5)
+
+
+def test_kernel_local_phase_matches_scan():
+    """use_local_kernel routes momentum-SGD through the fused Pallas
+    local_step kernel on the raveled params — same rounds at tolerance."""
+    base = _run15(_fl15("fed2"))
+    kern = _run15(_fl15("fed2"), use_local_kernel=True)
+    _leafcmp(base, kern, atol=1e-4)
+
+
+def test_kernel_route_noops_for_custom_client_update():
+    """scaffold overrides client_update, so fused_local_step is False and
+    the flag must silently no-op — bit-identical rounds."""
+    assert not methods_lib.get("scaffold").fused_local_step
+    base = _run15(_fl15("scaffold", rounds=1))
+    kern = _run15(_fl15("scaffold", rounds=1), use_local_kernel=True)
+    _leafcmp(base, kern)
+
+
+@pytest.mark.parametrize("method", _MP_METHODS)
+def test_bfloat16_round_matches_fp32_at_tolerance(method):
+    """bf16 local phase + fp32 fusion accumulators: final params within
+    bf16 resolution of the fp32 round for every eligible method."""
+    base = _run15(_fl15(method, rounds=1))
+    half = _run15(_fl15(method, rounds=1, compute_dtype="bfloat16"))
+    for leaf in jax.tree_util.tree_leaves(half["final_params"]):
+        assert leaf.dtype == jnp.float32    # storage dtype restored
+    _leafcmp(base, half, atol=0.05)
+    assert np.isfinite(half["acc"][-1])
+
+
+def test_identity_codec_round_is_bit_identical():
+    base = _run15(_fl15("fed2"))
+    ident = _run15(_fl15("fed2", codec="identity"))
+    _leafcmp(base, ident)
+
+
+@pytest.mark.parametrize("codec", ["int8", "topk(0.3)"])
+def test_lossy_codec_rounds_stay_finite(codec):
+    h = _run15(_fl15("fed2", codec=codec))
+    assert np.isfinite(h["acc"][-1])
+    for leaf in jax.tree_util.tree_leaves(h["final_params"]):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_config_refusals():
+    """FLConfig validation carries THE single copy of each eligibility
+    rule — the refusal fires at construction, not deep in tracing."""
+    with pytest.raises(ValueError, match="does not support"):
+        _fl15("scaffold", codec="int8")
+    with pytest.raises(ValueError, match="bfloat16 local phase"):
+        _fl15("fedma", compute_dtype="bfloat16")
+    with pytest.raises(ValueError, match="lossy codec"):
+        _fl15("fedavg", codec="int8", robust="coordinate_median")
+    with pytest.raises(ValueError, match="unknown compute_dtype"):
+        _fl15("fedavg", compute_dtype="float16")
+    with pytest.raises(ValueError, match="local_unroll"):
+        _fl15("fedavg", local_unroll=0)
+    with pytest.raises(ValueError, match="mode='sync'"):
+        _fl15("fedavg", codec="int8", mode="async", buffer_k=2)
+    with pytest.raises(ValueError, match="tiers"):
+        _fl15("fedavg", compute_dtype="bfloat16", tiers="1.0x2,0.5x1")
+    # fedadam fuses on device but its adaptive server step amplifies
+    # uplink noise — it opts out of bf16 and codecs (methods.py)
+    with pytest.raises(ValueError, match="bfloat16 local phase"):
+        _fl15("fedadam", compute_dtype="bfloat16")
+    with pytest.raises(ValueError, match="does not support"):
+        _fl15("fedadam", codec="int8")
+    # identity composes with reducing robust rules (exact codec)
+    _fl15("fedavg", codec="identity", robust="coordinate_median")
+
+
+def test_lower_round_carries_group_weights_for_fed2():
+    """Regression: lower_round used to pass group_weights=None, so the
+    drift gate never covered the presence-weighted fed2 program. The
+    lowered module must now take the (cohort, n_groups) gw argument."""
+    cfg, fl = _cfg("fed2"), _fl("fed2")
+    task = cnn_task(cfg)
+    lowered = lower_round(task, fl, make_host_mesh(),
+                          {"images": ((8, 32, 32, 3), jnp.float32),
+                           "labels": ((8,), jnp.int32)},
+                          local_steps=2)
+    assert "tensor<3x2xf32>" in lowered.as_text()  # cohort=3, groups=2
+
+    cfg_a, fl_a = _cfg("fedavg"), _fl("fedavg")
+    lowered_a = lower_round(cnn_task(cfg_a), fl_a, make_host_mesh(),
+                            {"images": ((8, 32, 32, 3), jnp.float32),
+                             "labels": ((8,), jnp.int32)},
+                            local_steps=2)
+    assert "tensor<3x2xf32>" not in lowered_a.as_text()
+
+
 # ---------------------------------------------------------------------------
 # _pack_client_batches
 # ---------------------------------------------------------------------------

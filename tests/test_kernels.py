@@ -113,3 +113,67 @@ def test_paired_fusion_with_perms():
     permuted = np.asarray(s[1]).reshape(4, 2, 4)[perms[1]].reshape(8, 4)
     want = 0.5 * (np.asarray(s[0]) + permuted)
     np.testing.assert_allclose(np.asarray(got), want, atol=1e-6)
+
+
+@pytest.mark.parametrize("m", [64, 128, 1000, 5000, 1])
+@pytest.mark.parametrize("mu", [0.0, 0.9])
+def test_local_step(m, mu):
+    p = jax.random.normal(KEY, (m,))
+    v = jax.random.normal(jax.random.PRNGKey(1), (m,)) * 0.1
+    g = jax.random.normal(jax.random.PRNGKey(2), (m,))
+    p2, v2 = ops.local_step(p, v, g, lr=0.05, mu=mu)
+    pr, vr = ref.local_step_ref(p, v, g, lr=0.05, mu=mu)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(vr), atol=1e-6)
+
+
+def test_local_step_bf16_storage_fp32_compute():
+    """bf16 params/velocity round through an fp32 update (DESIGN.md §15):
+    the kernel must match the fp32 oracle to bf16 resolution, not
+    accumulate in bf16."""
+    m = 512
+    p = jax.random.normal(KEY, (m,), jnp.bfloat16)
+    v = (jax.random.normal(jax.random.PRNGKey(1), (m,)) * 0.1
+         ).astype(jnp.bfloat16)
+    g = jax.random.normal(jax.random.PRNGKey(2), (m,), jnp.bfloat16)
+    p2, v2 = ops.local_step(p, v, g, lr=0.05, mu=0.9)
+    assert p2.dtype == jnp.bfloat16 and v2.dtype == jnp.bfloat16
+    pr, vr = ref.local_step_ref(p, v, g, lr=0.05, mu=0.9)
+    np.testing.assert_allclose(np.asarray(p2, np.float32),
+                               np.asarray(pr, np.float32), atol=2e-2)
+    np.testing.assert_allclose(np.asarray(v2, np.float32),
+                               np.asarray(vr, np.float32), atol=2e-2)
+
+
+def test_local_step_under_vmap():
+    """The engine calls the kernel inside a vmapped client axis."""
+    n, m = 3, 700
+    p = jax.random.normal(KEY, (n, m))
+    v = jnp.zeros((n, m))
+    g = jax.random.normal(jax.random.PRNGKey(2), (n, m))
+    p2, v2 = jax.vmap(
+        lambda a, b, c: ops.local_step(a, b, c, lr=0.1, mu=0.5))(p, v, g)
+    pr, vr = jax.vmap(
+        lambda a, b, c: ref.local_step_ref(a, b, c, lr=0.1, mu=0.5))(p, v, g)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(vr), atol=1e-6)
+
+
+def test_pallas_interpret_reads_env_per_call(monkeypatch):
+    """Regression: the interpret/compile switch used to be frozen into a
+    module constant at import time, so flipping REPRO_PALLAS_COMPILE
+    after `import repro.kernels.ops` silently did nothing. The switch
+    must be re-read per call."""
+    monkeypatch.delenv("REPRO_PALLAS_COMPILE", raising=False)
+    assert ops.pallas_interpret() is True
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "1")
+    assert ops.pallas_interpret() is False
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "0")
+    assert ops.pallas_interpret() is True
+    # fusion's default_use_kernel shares THE single copy of the rule
+    from repro.core import fusion
+    monkeypatch.delenv("REPRO_FUSION_KERNEL", raising=False)
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "1")
+    assert fusion.default_use_kernel() is True
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "0")
+    assert fusion.default_use_kernel() is False

@@ -340,3 +340,72 @@ def test_median_breakdown_single_attacker_stays_in_honest_envelope(
     got = np.asarray(rule.reduce(jnp.asarray(x), jnp.asarray(wa)))
     lo, hi = x[1:].min(axis=0), x[1:].max(axis=0)
     assert (got >= lo - 1e-6).all() and (got <= hi + 1e-6).all()
+
+
+# --------------------------------------------------------------------------
+# Uplink codecs (fl/codec.py, DESIGN.md §15): round-trip error bounds
+# --------------------------------------------------------------------------
+
+from repro.fl import codec as codec_lib                   # noqa: E402
+
+
+def _delta_stack(n, m, seed, scale):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, m)) * scale).astype(np.float32)
+
+
+@SET
+@given(st.integers(2, 6), st.integers(1, 80),
+       st.integers(0, 2**31 - 1), st.floats(1e-4, 1e3))
+def test_identity_codec_bit_identical(n, m, seed, scale):
+    """identity.roundtrip must be object-level passthrough: the exact
+    bits, whatever the dynamic range."""
+    stacked = jnp.asarray(_delta_stack(n, m, seed, scale))
+    gp = jnp.asarray(_delta_stack(1, m, seed + 1, scale)[0])
+    out = codec_lib.get("identity").roundtrip({"w": stacked}, {"w": gp})
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(stacked))
+
+
+@SET
+@given(st.integers(2, 6), st.integers(1, 80),
+       st.integers(0, 2**31 - 1), st.floats(1e-4, 1e3))
+def test_int8_decode_error_bounded_by_half_scale(n, m, seed, scale):
+    """Per coordinate: |decode(encode(d)) - d| <= scale/2 where scale is
+    that client-leaf's max|d|/127 — the quantizer's contract."""
+    d = _delta_stack(n, m, seed, scale)
+    c = codec_lib.get("int8")
+    dec = c.decode(c.encode({"w": jnp.asarray(d)}))["w"]
+    s = np.abs(d).max(axis=1, keepdims=True) / 127.0
+    s = np.where(s > 0, s, 1.0)
+    err = np.abs(np.asarray(dec) - d)
+    assert (err <= 0.5 * s + 1e-6 * np.maximum(s, 1.0)).all()
+
+
+@SET
+@given(st.integers(2, 5), st.integers(1, 60),
+       st.integers(0, 2**31 - 1), st.floats(0.01, 1.0))
+def test_topk_exact_on_support_zero_elsewhere(n, m, seed, frac):
+    d = _delta_stack(n, m, seed, 1.0)
+    c = codec_lib.TopKCodec(frac)
+    dec = np.asarray(c.decode(c.encode({"w": jnp.asarray(d)}))["w"])
+    k = c._k(m)
+    for i in range(n):
+        kept = np.argsort(-np.abs(d[i]))[:k]
+        np.testing.assert_allclose(dec[i][kept], d[i][kept], atol=1e-6)
+        mask = np.ones(m, bool)
+        mask[kept] = False
+        assert (dec[i][mask] == 0).all()
+
+
+@SET
+@given(st.integers(1, 4), st.integers(1, 200))
+def test_codec_bytes_ordering(n, m):
+    """Uplink accounting: int8 strictly under the dense identity bytes
+    for any leaf of >1 coordinate, and topk monotone in its fraction."""
+    tree = {"w": jnp.zeros((m, max(n, 1)))}
+    dense = codec_lib.get("identity").bytes_per_client(tree)
+    q8 = codec_lib.get("int8").bytes_per_client(tree)
+    assert q8 <= dense // 4 + 4
+    assert (codec_lib.TopKCodec(0.1).bytes_per_client(tree)
+            <= codec_lib.TopKCodec(0.7).bytes_per_client(tree))
