@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-claims smoke smoke-scenario scenarios bench-infra \
 	bench-cohort bench-population bench-eval bench-tiers bench-async \
-	bench-robust bench-engine dryrun-fl check-drift
+	bench-robust bench-alignment bench-engine dryrun-fl check-drift
 
 # the tier-1 gate (ROADMAP.md)
 test:
@@ -85,6 +85,12 @@ bench-async:
 # the overhead of the breakdown guarantee (fl/robust.py, DESIGN.md §14)
 bench-robust:
 	$(PY) benchmarks/flbench.py bench_robust
+
+# alignment strategies head to head under label skew: rounds/sec +
+# final accuracy for grouped(fed2) / pan(fedavg) / none(fedavg) and the
+# one-shot extreme on the same step budget (fl/alignment.py, DESIGN.md §16)
+bench-alignment:
+	$(PY) benchmarks/flbench.py bench_alignment
 
 bench-infra:
 	REPRO_BENCH_SET=infra $(PY) -m benchmarks.run

@@ -1,0 +1,132 @@
+"""Alignment strategies: HOW clients keep features comparable across
+fusion (DESIGN.md §16).
+
+Fed2's structural adaptation is one point in the feature-alignment
+design space the related work maps out. This registry lifts the choice
+out of its old hard-coding (``uses_groups`` branches scattered through
+scenarios/train/dryrun/bench) into first-class ``AlignmentStrategy``
+objects, registered exactly like federated methods (fl/methods.py):
+``register`` / ``get`` / ``available()``.
+
+- ``grouped``  — the Fed2 structure adaptation (Eq. 16): the model is
+  rebuilt with class-exclusive feature groups (grouped convs,
+  block-diagonal FCs, decoupled logits) for methods that declare
+  ``uses_groups``, and stays the plain baseline of the same widths for
+  coordinate methods. This IS the pre-redesign behavior for every
+  method — the default, bit-identical by construction (pinned by
+  tests/test_alignment.py and the blocking perf-drift gate).
+- ``pan``      — Position-Aware Neurons (PANs, arxiv 2203.14666):
+  alignment WITHOUT structure. The net stays plain, and a fixed
+  (non-trainable, client-shared) per-channel position encoding is added
+  to every hidden layer's pre-activation (``models/cnn.py
+  pan_encoding``). The shared encodings break the permutation symmetry
+  of hidden neurons, anchoring feature positions across clients so
+  plain coordinate averaging pairs like with like.
+- ``none``     — the explicit no-alignment baseline: plain net, plain
+  coordinate averaging. For coordinate methods this compiles the exact
+  ``grouped`` program (those methods never had structure); it exists so
+  the judge-panel matrix (fl/scenarios.py) states its control row
+  explicitly.
+
+Eligibility lives in fl/compat.py (``check_alignment_support``):
+``grouped`` is always allowed; ``pan``/``none`` refuse methods whose
+fuse is defined over structure groups (fed2 — paired averaging needs
+group axes a plain net doesn't have).
+
+``build_model_config(strategy, method, grouped_fn, plain_fn)`` is THE
+single model-construction rule every consumer routes through
+(``ScenarioSpec.model_config``, ``launch/train.py``,
+``launch/fl_dryrun.py``, ``benchmarks/flbench.py``): callers supply how
+to build the grouped and the plain config for their model family; the
+strategy picks and stamps its PAN scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class AlignmentStrategy:
+    """One way of keeping client features comparable across fusion."""
+
+    name: str = ""
+    summary: str = ""       # one line for the README alignment table
+    structural = False      # grouped: delegate to the METHOD's structure
+    #                         declaration (uses_groups -> Fed2-adapted
+    #                         net); False -> always the plain net
+    pan_scale = 0.0         # scale of the fixed position encodings added
+    #                         to hidden pre-activations (0 = none; the
+    #                         traced forward is bit-identical at 0)
+
+
+_REGISTRY: dict[str, type[AlignmentStrategy]] = {}
+
+
+def register(cls: type[AlignmentStrategy]) -> type[AlignmentStrategy]:
+    if not cls.name:
+        raise ValueError("AlignmentStrategy.name must be non-empty")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available() -> tuple[str, ...]:
+    """All registered strategy names, sorted (the canonical enumeration
+    for ``--alignment`` choices, the README table, and the sweep)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> AlignmentStrategy:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown alignment strategy {name!r}; available: "
+            f"{', '.join(available())}") from None
+
+
+def build_model_config(strategy: AlignmentStrategy, method, grouped_fn,
+                       plain_fn):
+    """THE model-construction rule: ``grouped_fn()`` builds the family's
+    Fed2-adapted (group-structured) config, ``plain_fn()`` the plain
+    baseline of the same widths. The structural strategy delegates to
+    the method's own declaration — exactly the pre-redesign branch, so
+    the default compiles the identical program; non-structural
+    strategies always build plain and stamp their PAN scale."""
+    from repro.fl import compat as compat_lib
+    if strategy.structural:
+        cfg = (grouped_fn() if not compat_lib.supports(method, "alignment")
+               else plain_fn())
+    else:
+        cfg = plain_fn()
+    if strategy.pan_scale:
+        cfg = dataclasses.replace(cfg, pan=strategy.pan_scale)
+    return cfg
+
+
+@register
+class GroupedAlignment(AlignmentStrategy):
+    """Fed2 structure adaptation (Eq. 16) — alignment by construction
+    for group-structured methods; the plain same-width baseline for
+    coordinate methods. The pre-redesign default, bit-identical."""
+    name = "grouped"
+    summary = ("Fed2 structure adaptation (Eq. 16): class-exclusive "
+               "feature groups for uses_groups methods")
+    structural = True
+
+
+@register
+class PanAlignment(AlignmentStrategy):
+    """PAN position encodings (arxiv 2203.14666): plain net + fixed
+    client-shared per-channel encodings on hidden pre-activations."""
+    name = "pan"
+    summary = ("PAN position encodings (arxiv 2203.14666) on a plain "
+               "net: fixed per-channel anchors break permutation "
+               "symmetry")
+    pan_scale = 0.2
+
+
+@register
+class NoAlignment(AlignmentStrategy):
+    """Plain net, plain coordinate averaging — the explicit control row
+    of the judge-panel matrix."""
+    name = "none"
+    summary = "plain coordinate averaging, no alignment (control row)"

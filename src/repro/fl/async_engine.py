@@ -219,35 +219,10 @@ class LatencyTrace:
 # ---------------------------------------------------------------------------
 
 
-def check_async_support(method: FedMethod, *,
-                        presence_weighted: bool = False) -> None:
-    """THE eligibility check for buffered-async federation (one source
-    of truth for FLConfig validation and driver construction, mirroring
-    capacity.check_tier_support): raise unless ``method`` declares
-    ``async_eligible``, and always for presence-weighted group fusion."""
-    if not method.async_eligible:
-        raise ValueError(
-            f"{method.name} does not support buffered-async federation "
-            "(FedMethod.async_eligible): a fusion event fuses "
-            "staleness-discounted updates that trained from MIXED global "
-            "versions, which needs a device fuse affine in the weighted "
-            "client mean and no per-client state"
-            + (" — host matched averaging has no staleness-weighted form"
-               if method.host_fusion else
-               " — its server step reads the participating cohort's "
-               "per-client state, which a buffer of mixed-version "
-               "arrivals cannot provide"
-               if method.client_stateful or not method.cohort_tiling
-               else "") + "; run mode='sync' instead")
-    if presence_weighted:
-        raise ValueError(
-            "presence-weighted group fusion does not support "
-            "buffered-async federation: each fusion event renormalizes "
-            "group columns over its buffer_k arrivals, and a group held "
-            "by no arrival falls back to the uniform column — either "
-            "biases Eq. 19 exactly as tiled sync rounds would "
-            "(fl/runtime.py); drop class_counts/group_spec or run "
-            "mode='sync'")
+# THE eligibility check for buffered-async federation now lives in
+# fl/compat.py — the unified capability matrix (DESIGN.md §16);
+# re-exported here so historical call sites keep working.
+from repro.fl.compat import check_async_support  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------

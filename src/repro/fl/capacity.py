@@ -119,24 +119,10 @@ def validate_mix(mix, population: int) -> None:
             "every logical client needs exactly one tier")
 
 
-def check_tier_support(method, mix=None) -> None:
-    """THE eligibility check for tiered fusion (one source of truth for
-    FLConfig validation and engine construction): raise unless
-    ``method`` (a FedMethod instance) declares ``tier_fusion``. A
-    trivial mix — one width-1.0 tier — is always allowed: it routes
-    through the homogeneous engine and no tiered machinery runs."""
-    if mix is not None and len(mix) == 1 and mix[0][0] == 1.0:
-        return
-    if not method.tier_fusion:
-        raise ValueError(
-            f"{method.name} does not support capacity tiers "
-            "(FedMethod.tier_fusion): tiered fusion needs a device fuse "
-            "affine in the weighted client mean and no per-client state"
-            + (" — host matching is not defined across sub-model widths"
-               if method.host_fusion else
-               " — its server step reads per-client cohort state"
-               if method.client_stateful or not method.cohort_tiling
-               else ""))
+# THE eligibility check for tiered fusion now lives in fl/compat.py —
+# the unified capability matrix (DESIGN.md §16); re-exported here so
+# historical call sites keep working.
+from repro.fl.compat import check_tier_support  # noqa: E402,F401
 
 
 @dataclasses.dataclass(frozen=True)

@@ -47,30 +47,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fl.methods import FedMethod
 
-
-def check_codec_support(method: FedMethod, codec=None, robust=None) -> None:
-    """Raise unless ``method`` (and the active robust rule) can carry the
-    codec — THE single copy of the eligibility rule (FLConfig validation
-    and make_round_engine both call it)."""
-    if not method.uplink_codec:
-        what = codec.describe() if codec is not None else "an uplink codec"
-        raise ValueError(
-            f"{method.name} does not support {what} "
-            "(FedMethod.uplink_codec): decode-then-fuse reconstructs the "
-            "client deltas on the device right before an affine fuse — "
-            "host-fusion methods never fuse on device, and "
-            "client-stateful methods correct drift off the exact local "
-            "params, which a lossy uplink would silently bias")
-    if (codec is not None and robust is not None and robust.reduces
-            and not codec.exact):
-        raise ValueError(
-            f"robust rule {robust.describe()!r} refuses lossy codec "
-            f"{codec.describe()!r}: the reducing rules' breakdown "
-            "guarantee is proven for the updates the clients sent, not "
-            "for quantized reconstructions — use the exact 'identity' "
-            "codec or drop the robust rule")
+# THE eligibility check for uplink codecs now lives in fl/compat.py —
+# the unified capability matrix (DESIGN.md §16); re-exported here so
+# historical call sites keep working.
+from repro.fl.compat import check_codec_support  # noqa: E402,F401
 
 
 class UplinkCodec:

@@ -61,6 +61,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import fusion as fusion_lib
 from repro.fl import attacks as attacks_lib
 from repro.fl import codec as codec_lib
+from repro.fl import compat as compat_lib
 from repro.fl import methods as methods_lib
 from repro.fl import robust as robust_lib
 from repro.fl.methods import FedMethod, MethodContext
@@ -104,12 +105,7 @@ def resolve_compute_dtype(compute_dtype, method: FedMethod):
         raise ValueError(
             f"unknown compute_dtype {compute_dtype!r}; choose 'float32' "
             "or 'bfloat16'")
-    if not method.mixed_precision:
-        raise ValueError(
-            f"{method.name} does not support a bfloat16 local phase "
-            "(FedMethod.mixed_precision): the downcast happens at the "
-            "round boundary, so the method must be client-stateless and "
-            "fuse on the device where the fp32 accumulators live")
+    compat_lib.check_bf16_support(method)
     return jnp.bfloat16
 
 
@@ -301,6 +297,9 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
     under reducing robust rules), and ``local_unroll``
     (``resolve_local_unroll`` — batched local-step dispatch)."""
     meth = method if method is not None else methods_lib.get(cfg.method)
+    # direct engine drives (benches, dryrun, tests) hit the same
+    # capability-matrix refusals as FLConfig construction (§16)
+    compat_lib.validate(cfg, meth)
     if meth.host_fusion and (
             type(meth).init_server_state is not FedMethod.init_server_state
             or type(meth).server_update is not FedMethod.server_update):
@@ -342,7 +341,8 @@ def make_round_engine(task, cfg, params_like: PyTree, *, mesh=None,
         codec = codec_lib.parse_codec(cfg.codec)
         codec_lib.check_codec_support(meth, codec, rule)
     steps = cfg.local_epochs * cfg.steps_per_epoch
-    use_local_kernel = bool(use_local_kernel) and meth.fused_local_step
+    use_local_kernel = (bool(use_local_kernel)
+                        and compat_lib.supports(meth, "kernel"))
     ctx = MethodContext(task=task, cfg=cfg, population=cfg.population,
                         cohort_size=n,
                         local_steps=steps,

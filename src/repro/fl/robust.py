@@ -39,22 +39,11 @@ import re
 import jax
 import jax.numpy as jnp
 
-from repro.fl.methods import FedMethod
 
-
-def check_robust_support(method: FedMethod, rule=None) -> None:
-    """Raise unless ``method`` can carry robust fusion — THE single copy
-    of the eligibility rule (FLConfig validation and make_round_engine
-    both call it)."""
-    if not method.robust_fusion:
-        what = rule.describe() if rule is not None else "robust fusion"
-        raise ValueError(
-            f"{method.name} does not support {what} "
-            "(FedMethod.robust_fusion): robust rules replace or wrap the "
-            "cross-client reduction inside core/fusion.py, which "
-            "host-fusion methods never run — their round ends at the "
-            "stacked params and fuses on the host (matching has no "
-            "coordinate-reduction form)")
+# THE eligibility check for robust fusion now lives in fl/compat.py —
+# the unified capability matrix (DESIGN.md §16); re-exported here so
+# historical call sites keep working.
+from repro.fl.compat import check_robust_support  # noqa: E402,F401
 
 
 class RobustRule:

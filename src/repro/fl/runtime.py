@@ -94,12 +94,15 @@ class FLConfig:
     # (width, client count) pairs — "1.0x2,0.5x2,0.25x2" or a tuple of
     # pairs; None/() = homogeneous. Counts must sum to the population.
     tiers: Any = None
-    # buffered-async federation (fl/async_engine.py, DESIGN.md §12):
-    # mode="async" makes the fusion event the unit of progress — rounds
+    # federation mode (DESIGN.md §12/§16): "sync" runs the round loop;
+    # "async" makes the fusion event the unit of progress — rounds
     # counts events, cohort_size is the in-flight concurrency, buffer_k
     # updates fuse per event (None -> cohort_size) under the staleness
-    # discount ("constant" | "polynomial(a)"). Only async-eligible
-    # methods qualify (FedMethod.async_eligible).
+    # discount ("constant" | "polynomial(a)"), async-eligible methods
+    # only (FedMethod.async_eligible); "one_shot" trains the WHOLE
+    # rounds x local_epochs x steps_per_epoch budget locally and fuses
+    # exactly once (one_shot_config — the EconML FederatedEstimator
+    # shape), refused for client-stateful methods.
     mode: str = "sync"
     buffer_k: int | None = None
     staleness: str = "constant"
@@ -125,6 +128,16 @@ class FLConfig:
     compute_dtype: str = "float32"
     codec: str | None = None
     local_unroll: int = 1
+    # alignment strategy (fl/alignment.py, DESIGN.md §16): how plain
+    # coordinate fusion is made feature-aligned. "grouped" — the default
+    # — is the method's own structural declaration (Fed2 structure
+    # adaptation for uses_groups methods, plain net otherwise:
+    # bit-identical to the pre-strategy programs); "pan" adds fixed
+    # per-channel position encodings to a plain net (arxiv 2203.14666);
+    # "none" is the unaligned plain-net control. The MODEL must be built
+    # through alignment.build_model_config for the strategy to bite —
+    # FLConfig only validates eligibility and records the choice.
+    alignment: str = "grouped"
 
     def __post_init__(self):
         if self.method not in methods_lib.available():
@@ -166,17 +179,14 @@ class FLConfig:
             from repro.fl import capacity as capacity_lib
             mix = capacity_lib.parse_tiers(self.tiers)
             capacity_lib.validate_mix(mix, self.population)
-            capacity_lib.check_tier_support(methods_lib.get(self.method),
-                                            mix)
             object.__setattr__(self, "tiers", mix)
-        if self.mode not in ("sync", "async"):
+        if self.mode not in ("sync", "async", "one_shot"):
             raise ValueError(
-                f"FLConfig.mode must be 'sync' or 'async', got "
-                f"{self.mode!r}")
+                f"FLConfig.mode must be 'sync', 'async' or 'one_shot', "
+                f"got {self.mode!r}")
         if self.mode == "async":
             from repro.fl import async_engine as async_lib
             async_lib.parse_staleness(self.staleness)
-            async_lib.check_async_support(methods_lib.get(self.method))
             if self.tiers is not None:
                 raise ValueError(
                     "FLConfig.tiers and mode='async' are mutually "
@@ -217,9 +227,7 @@ class FLConfig:
             object.__setattr__(self, "robust", None)
         else:
             from repro.fl import robust as robust_lib
-            rule = robust_lib.parse_robust(self.robust)
-            robust_lib.check_robust_support(methods_lib.get(self.method),
-                                            rule)
+            robust_lib.parse_robust(self.robust)
         if self.attack or self.robust:
             what = "attack" if self.attack else "robust"
             if self.tiers is not None:
@@ -238,9 +246,10 @@ class FLConfig:
                     "per-round malicious row / robust reduction "
                     "(DESIGN.md §14) has no buffered form yet; run "
                     "mode='sync'")
-        # §15 engine performance knobs: resolve through THE single-copy
-        # eligibility rules so a bad config fails at construction, not
-        # deep inside engine building
+        # §15 engine performance knobs: value parsing (the eligibility
+        # half lives in compat.validate, which resolve_compute_dtype
+        # also consults — a bad config fails at construction, not deep
+        # inside engine building)
         from repro.fl.engine import resolve_compute_dtype
         resolve_compute_dtype(self.compute_dtype,
                               methods_lib.get(self.method))
@@ -255,15 +264,7 @@ class FLConfig:
             object.__setattr__(self, "codec", None)
         else:
             from repro.fl import codec as codec_lib
-            from repro.fl import robust as robust_lib
-            c = codec_lib.parse_codec(self.codec)
-            rule = None
-            if self.robust:
-                rule = robust_lib.parse_robust(self.robust)
-                if not rule.active:
-                    rule = None
-            codec_lib.check_codec_support(methods_lib.get(self.method),
-                                          c, rule)
+            codec_lib.parse_codec(self.codec)
         if self.compute_dtype != "float32" or self.codec is not None:
             knob = ("compute_dtype" if self.compute_dtype != "float32"
                     else "codec")
@@ -281,6 +282,10 @@ class FLConfig:
                     "split (DESIGN.md §12) implements neither the round-"
                     "boundary dtype cast nor the decode-then-fuse "
                     "round-trip; run mode='sync'")
+        # method eligibility for every knob above, in ONE place — the
+        # capability matrix (fl/compat.py, DESIGN.md §16)
+        from repro.fl import compat as compat_lib
+        compat_lib.validate(self, methods_lib.get(self.method))
 
 
 @dataclasses.dataclass
@@ -496,6 +501,24 @@ def run_sampled_round(engine, pop: Population, method, server_state,
     return engine.finish_round(server_state, global_params, fused)
 
 
+def one_shot_config(cfg: FLConfig) -> FLConfig:
+    """The sync config a ``mode='one_shot'`` run actually executes
+    (DESIGN.md §16): every client trains the WHOLE round budget locally
+    — rounds x local_epochs x steps_per_epoch optimizer steps — and the
+    server fuses exactly ONCE, the federated-ensembling shape of one-shot
+    FL (cf. EconML's FederatedEstimator: full local fits, one
+    aggregation). Mapping it onto a 1-round sync run reuses the entire
+    engine unchanged (tiling, tiers, checkpointing, eval), so the only
+    new semantics is the budget fold; ``run_federated`` applies this at
+    the top and the returned history has exactly one round row."""
+    if cfg.mode != "one_shot":
+        return cfg
+    return dataclasses.replace(
+        cfg, mode="sync", rounds=1, local_epochs=1,
+        steps_per_epoch=(cfg.rounds * cfg.local_epochs
+                         * cfg.steps_per_epoch))
+
+
 def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
                   test_batches, *, latency: str = "zero", log=None,
                   class_counts=None, group_spec=None, mesh=None,
@@ -567,6 +590,9 @@ def run_federated(task: FLTask, cfg: FLConfig, parts, get_batch,
             f"FLConfig.population={cfg.population}; the partition defines "
             "the logical population — partition with "
             "n_clients=cfg.population or fix the config")
+    # one-shot fusion is a config transformation (train everything
+    # locally, fuse once) — from here on the run IS a 1-round sync run
+    cfg = one_shot_config(cfg)
     if cfg.mode == "async":
         from repro.fl import async_engine as async_lib
         if checkpoint_dir or resume:

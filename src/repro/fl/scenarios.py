@@ -73,6 +73,13 @@ class ScenarioSpec:
     seed-deterministic attacker share (>= 1 = explicit count); robust
     names the fusion rule wrapping the method's fuse. Empty = honest
     run / plain fusion.
+    alignment: feature-alignment strategy (fl/alignment.py, DESIGN.md
+    §16) — "grouped" (the method's own structural declaration: Fed2
+    structure adaptation for uses_groups methods, plain net otherwise),
+    "pan" (fixed per-channel position encodings on a plain net), "none"
+    (unaligned plain-net control). mode="one_shot" trains the whole
+    round budget locally and fuses exactly once
+    (fl/runtime.py one_shot_config).
     """
     name: str
     summary: str
@@ -108,6 +115,7 @@ class ScenarioSpec:
     attack: str = ""
     attack_fraction: float = 0.0
     robust: str = ""
+    alignment: str = "grouped"
 
     def __post_init__(self):
         if self.protocol not in PROTOCOLS:
@@ -136,15 +144,14 @@ class ScenarioSpec:
             raise ValueError(
                 f"unknown client-state store {self.store!r}; available: "
                 f"{', '.join(statestore_lib.available())}")
-        if self.mode not in ("sync", "async"):
+        if self.mode not in ("sync", "async", "one_shot"):
             raise ValueError(
-                f"ScenarioSpec.mode must be 'sync' or 'async', got "
-                f"{self.mode!r}")
+                f"ScenarioSpec.mode must be 'sync', 'async' or "
+                f"'one_shot', got {self.mode!r}")
         from repro.fl import async_engine as async_lib
         async_lib.parse_latency(self.latency)
         if self.mode == "async":
             async_lib.parse_staleness(self.staleness)
-            async_lib.check_async_support(methods_lib.get(self.method))
         elif self.latency != "zero":
             raise ValueError(
                 "ScenarioSpec.latency is only meaningful with "
@@ -162,9 +169,11 @@ class ScenarioSpec:
                 "the fraction")
         if self.robust:
             from repro.fl import robust as robust_lib
-            rule = robust_lib.parse_robust(self.robust)
-            robust_lib.check_robust_support(methods_lib.get(self.method),
-                                            rule)
+            robust_lib.parse_robust(self.robust)
+        # method eligibility (mode/robust/tiers/alignment/...) in ONE
+        # place — the capability matrix (fl/compat.py, DESIGN.md §16)
+        from repro.fl import compat as compat_lib
+        compat_lib.validate(self, methods_lib.get(self.method))
 
     def override(self, **kw) -> "ScenarioSpec":
         """A copy with fields replaced (smoke runs: fewer rounds, less
@@ -198,19 +207,25 @@ class ScenarioSpec:
 
     def model_config(self):
         """Width-calibrated reduced VGG9 (per-group capacity stays above
-        the grouping-viability width at G=5 — EXPERIMENTS.md §Boundary):
-        group-structured for group-structured methods, same-width plain
-        baseline otherwise."""
+        the grouping-viability width at G=5 — EXPERIMENTS.md §Boundary),
+        built through the alignment strategy (fl/alignment.py):
+        "grouped" yields the method's own structural declaration (Fed2
+        structure adaptation for uses_groups methods, same-width plain
+        baseline otherwise — the pre-strategy branch, bit-identical),
+        "pan"/"none" always build the plain net."""
+        from repro.fl import alignment as alignment_lib
         from repro.models.cnn import CNNConfig
         plan = (("c", 24), ("p",), ("c", 48), ("p",), ("c", 48), ("p",))
-        if methods_lib.get(self.method).uses_groups:
-            return CNNConfig(arch_id="vgg9-scenario", plan=plan,
-                             fc_dims=(160,), n_classes=self.n_classes,
-                             fed2_groups=self.groups,
-                             decouple=self.decouple, norm="gn")
-        return CNNConfig(arch_id="vgg9-scenario", plan=plan,
-                         fc_dims=(160,), n_classes=self.n_classes,
-                         fed2_groups=0, norm="none")
+        return alignment_lib.build_model_config(
+            alignment_lib.get(self.alignment),
+            methods_lib.get(self.method),
+            grouped_fn=lambda: CNNConfig(
+                arch_id="vgg9-scenario", plan=plan, fc_dims=(160,),
+                n_classes=self.n_classes, fed2_groups=self.groups,
+                decouple=self.decouple, norm="gn"),
+            plain_fn=lambda: CNNConfig(
+                arch_id="vgg9-scenario", plan=plan, fc_dims=(160,),
+                n_classes=self.n_classes, fed2_groups=0, norm="none"))
 
     def fl_config(self):
         from repro.fl.runtime import FLConfig
@@ -227,7 +242,8 @@ class ScenarioSpec:
                         buffer_k=self.buffer_k, staleness=self.staleness,
                         attack=self.attack or None,
                         attack_fraction=self.attack_fraction,
-                        robust=self.robust or None)
+                        robust=self.robust or None,
+                        alignment=self.alignment)
 
     def group_spec(self) -> GroupSpec:
         """The canonical class->group map the per-group accuracy rows
@@ -258,6 +274,7 @@ class ConvergenceRecord:
     attack: str = ""        # byzantine behavior ("" = honest run)
     attack_fraction: float = 0.0
     robust: str = ""        # robust fusion rule ("" = plain fusion)
+    alignment: str = "grouped"  # feature-alignment strategy (§16)
 
     @property
     def final_acc(self) -> float:
@@ -334,7 +351,7 @@ def run_scenario(spec: ScenarioSpec, *, mesh=None, use_kernel=None,
         mode=spec.mode,
         sim_time=[round(float(t), 4) for t in h.get("sim_time", [])],
         attack=spec.attack, attack_fraction=spec.attack_fraction,
-        robust=spec.robust)
+        robust=spec.robust, alignment=spec.alignment)
     if outdir is not None:
         rec.save(outdir)
     return rec
@@ -489,3 +506,40 @@ register(ScenarioSpec(
     population=10, attack="sign_flip(4)", attack_fraction=0.2,
     robust="trimmed_mean(0.25)",
     summary="20% sign-flip vs Fed2 + per-group 0.25-trimmed-mean fusion"))
+
+# -- alignment strategies + one-shot fusion (fl/alignment.py, §16) ----------
+# The judge-panel matrix over HOW features stay comparable: Fed2's
+# structural adaptation (nxc2_fed2/dir05_fed2 above, alignment="grouped")
+# vs PAN position encodings on a plain net (arxiv 2203.14666) vs the
+# unaligned plain-net control, on both label-skew protocols.
+# nxc2_fedavg_none is BIT-IDENTICAL to nxc2_fedavg by construction (a
+# coordinate method never had structure — tests/test_paper_claims.py
+# pins the equality); the pan rows isolate what the fixed per-channel
+# anchors buy WITHOUT touching the fuse. The one-shot rows spend the
+# identical step budget (10 rounds x 6 steps = 60 local steps) in a
+# single fusion — the communication-minimal extreme the round-iterated
+# claims are measured against.
+register(ScenarioSpec(
+    name="nxc2_fedavg_pan", protocol="nxc", method="fedavg",
+    alignment="pan",
+    summary="N x C skew, FedAvg on a plain net + PAN position encodings"))
+register(ScenarioSpec(
+    name="nxc2_fedavg_none", protocol="nxc", method="fedavg",
+    alignment="none",
+    summary="N x C skew, FedAvg unaligned control (== nxc2_fedavg)"))
+register(ScenarioSpec(
+    name="dir05_fedavg_pan", protocol="dirichlet", method="fedavg",
+    lr=0.01, alignment="pan",
+    summary="Dirichlet(0.5) skew, FedAvg + PAN position encodings"))
+register(ScenarioSpec(
+    name="dir05_fedavg_none", protocol="dirichlet", method="fedavg",
+    lr=0.01, alignment="none",
+    summary="Dirichlet(0.5) skew, FedAvg unaligned control"))
+register(ScenarioSpec(
+    name="nxc2_fed2_oneshot", protocol="nxc", method="fed2",
+    mode="one_shot",
+    summary="N x C skew, Fed2 one-shot: 60 local steps, ONE fusion"))
+register(ScenarioSpec(
+    name="nxc2_fedavg_oneshot", protocol="nxc", method="fedavg",
+    mode="one_shot",
+    summary="N x C skew, FedAvg one-shot: 60 local steps, ONE fusion"))

@@ -28,7 +28,11 @@ fusion family under a reducing robust rule (fl/attacks.py +
 fl/robust.py, DESIGN.md §14). And a §15 fast-path matrix
 (``FAST_MATRIX``, ``--no-fast-events`` to skip): one bf16 +
 compressed-uplink round per fusion family, stamping the codec's
-per-client uplink bytes against the dense uplink. Every ok record also
+per-client uplink bytes against the dense uplink. And an alignment
+matrix (``ALIGN_MATRIX``, ``--no-align-events`` to skip): one
+PAN-aligned plain-net round (fl/alignment.py, DESIGN.md §16) whose
+record pins that the fixed position encodings lower to a handful of
+adds, not a new program family. Every ok record also
 stamps its measured
 ``wall_s`` plus an auto ``max_wall_s`` budget for check_drift's
 non-blocking wall-clock WARN row.
@@ -64,6 +68,7 @@ import traceback     # noqa: E402
 
 import jax.numpy as jnp  # noqa: E402
 
+from repro.fl import compat as compat_lib                     # noqa: E402
 from repro.fl import methods as methods_lib                   # noqa: E402
 from repro.fl import population as population_lib             # noqa: E402
 from repro.fl.engine import (lower_round, resolve_use_kernel,  # noqa: E402
@@ -350,7 +355,7 @@ def run_async_matrix(mesh, mesh_name: str, *, methods=("fedavg", "fed2"),
     ``methods`` (ineligible ones have no event program to lower), at
     buffer_k = cohort/2 — the sub-cohort buffering the mode exists for."""
     eligible = [m for m in methods
-                if methods_lib.get(m).async_eligible]
+                if compat_lib.supports(methods_lib.get(m), "async")]
     buffer_k = max(1, clients // 2)
     return [run_async_one(m, f, mesh, mesh_name, clients=clients,
                           buffer_k=buffer_k, local_steps=local_steps,
@@ -520,6 +525,95 @@ def run_fast_matrix(mesh, mesh_name: str, *, methods=("fedavg", "fed2"),
             for m, spec in FAST_MATRIX if m in methods]
 
 
+# alignment placements (fl/alignment.py, DESIGN.md §16): one PAN round —
+# a plain net fused by fedavg with the fixed per-channel position
+# encodings traced into every hidden layer. The interesting pin is the
+# DELTA against the plain fedavg fl_round record: the anchors are
+# constants folded into adds, so flops/collectives barely move — the
+# whole cost of PAN alignment is a few broadcast adds per layer.
+ALIGN_MATRIX = (("fedavg", "pan"),)
+
+
+def run_align_one(method: str, strategy: str, mesh, mesh_name: str, *,
+                  clients: int, local_steps: int, batch: int,
+                  outdir: str, use_kernel=None,
+                  verbose: bool = True) -> dict:
+    """Lower+compile ONE aligned round (fl/alignment.py): the strategy's
+    model config (plain net + PAN encodings for 'pan') through the same
+    round engine as every fl_round record."""
+    from repro.configs import vgg9
+    from repro.fl import alignment as alignment_lib
+
+    tag = f"fl_align_{strategy}_{mesh_name}"
+    rec = {"kind": "fl_align", "method": method, "family": "cnn",
+           "mesh": mesh_name, "population": clients,
+           "cohort_size": clients, "local_steps": local_steps,
+           "batch": batch, "alignment": strategy}
+    try:
+        kind = "host" if mesh_name == "1x1" else "pod"
+        strat = alignment_lib.get(strategy)
+        meth = methods_lib.get(method)
+        if kind == "host":
+            cfg = alignment_lib.build_model_config(
+                strat, meth,
+                grouped_fn=lambda: vgg9.reduced(fed2_groups=5, decouple=3,
+                                                norm="gn"),
+                plain_fn=lambda: vgg9.reduced(fed2_groups=0, norm="none"))
+        else:
+            cfg = alignment_lib.build_model_config(
+                strat, meth,
+                grouped_fn=lambda: vgg9.full(fed2_groups=10, decouple=6,
+                                             norm="gn"),
+                plain_fn=lambda: vgg9.baseline())
+        task = cnn_task(cfg)
+        fl = FLConfig(population=clients, method=method,
+                      alignment=strategy)
+        t0 = time.time()
+        lowered = lower_round(task, fl, mesh,
+                              _batch_elems("cnn", batch, 0),
+                              local_steps=local_steps,
+                              use_kernel=use_kernel)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        colls = collective_bytes(compiled.as_text())
+        rec.update(
+            status="ok", arch=cfg.arch_id, pan_scale=cfg.pan,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops=_flops(compiled),
+            use_kernel=resolve_use_kernel(use_kernel, mesh),
+            memory={"temp_bytes": mem.temp_size_in_bytes,
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes},
+            collectives=colls)
+        _stamp_wall(rec, t_lower, t_compile)
+        if verbose:
+            busy = {k: round(v["bytes"] / 2**20, 1)
+                    for k, v in colls.items() if v["count"]}
+            print(f"[ok]   {tag}: lower {t_lower:.1f}s compile "
+                  f"{t_compile:.1f}s collectives(MiB) {busy}")
+    except Exception as e:  # noqa: BLE001 — record, keep the matrix going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    _write(outdir, tag, rec)
+    return rec
+
+
+def run_align_matrix(mesh, mesh_name: str, *, methods=("fedavg",),
+                     clients: int, local_steps: int, batch: int,
+                     outdir: str, use_kernel=None,
+                     verbose: bool = True) -> list:
+    return [run_align_one(m, strat, mesh, mesh_name, clients=clients,
+                          local_steps=local_steps, batch=batch,
+                          outdir=outdir, use_kernel=use_kernel,
+                          verbose=verbose)
+            for m, strat in ALIGN_MATRIX if m in methods]
+
+
 DEFAULT_OUT = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "..", "..",
     "benchmarks", "artifacts_perf"))      # cwd-independent, like flbench
@@ -531,7 +625,7 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                cohort_size=None, sampler: str = "full",
                use_kernel=None, tiers: bool = True,
                async_events: bool = True, robust_events: bool = True,
-               fast_events: bool = True,
+               fast_events: bool = True, align_events: bool = True,
                verbose: bool = True) -> list:
     methods = methods_lib.available() if methods is None else methods
     bad = [m for m in methods if m not in methods_lib.available()] + \
@@ -577,6 +671,12 @@ def run_matrix(*, mesh_kind: str = "pod", methods=None,
                                 clients=clients, local_steps=local_steps,
                                 batch=batch, outdir=outdir,
                                 use_kernel=use_kernel, verbose=verbose)
+    if align_events and "cnn" in families:
+        align_methods = [m for m in ("fedavg",) if m in methods]
+        recs += run_align_matrix(mesh, mesh_name, methods=align_methods,
+                                 clients=clients, local_steps=local_steps,
+                                 batch=batch, outdir=outdir,
+                                 use_kernel=use_kernel, verbose=verbose)
     return recs
 
 
@@ -628,6 +728,11 @@ def main():
                     help="also lower the §15 fast-path round matrix "
                          "(bf16 local phase + uplink codec: fedavg x "
                          "int8 / fed2 x topk, cnn; fl/codec.py)")
+    ap.add_argument("--align-events",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="also lower the alignment-strategy round matrix "
+                         "(fedavg x PAN position encodings, cnn; "
+                         "fl/alignment.py)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
 
@@ -643,7 +748,8 @@ def main():
                       use_kernel=args.use_kernel, tiers=args.tiers,
                       async_events=args.async_events,
                       robust_events=args.robust_events,
-                      fast_events=args.fast_events)
+                      fast_events=args.fast_events,
+                      align_events=args.align_events)
     n_fail = sum(r["status"] == "error" for r in recs)
     print(f"done; {len(recs)} records, {n_fail} failures")
     raise SystemExit(1 if n_fail else 0)

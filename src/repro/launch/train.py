@@ -74,6 +74,7 @@ def run_fl(args):
 
     from repro.data.synthetic import (dirichlet_partition,
                                       make_image_dataset, nxc_partition)
+    from repro.fl import alignment as alignment_lib
     from repro.fl import methods as methods_lib
     from repro.fl.runtime import FLConfig, cnn_task, run_federated
 
@@ -103,12 +104,15 @@ def run_fl(args):
 
     mod = importlib.import_module(
         f"repro.configs.{args.arch.replace('-', '_').replace('.', '_')}")
-    if methods_lib.get(args.method).uses_groups:
-        cfg = (mod.reduced() if args.reduced else
-               mod.full(fed2_groups=args.fed2_groups))
-    else:
-        cfg = (mod.reduced(fed2_groups=0, norm="none") if args.reduced
-               else mod.baseline())
+    # model construction routes through THE alignment rule
+    # (fl/alignment.py): "grouped" is each method's own structural
+    # declaration (the historical branch), "pan"/"none" build plain
+    cfg = alignment_lib.build_model_config(
+        alignment_lib.get(args.alignment), methods_lib.get(args.method),
+        grouped_fn=lambda: (mod.reduced() if args.reduced else
+                            mod.full(fed2_groups=args.fed2_groups)),
+        plain_fn=lambda: (mod.reduced(fed2_groups=0, norm="none")
+                          if args.reduced else mod.baseline()))
     ds = make_image_dataset(args.train_size, n_classes=cfg.n_classes,
                             seed=args.seed, noise=args.noise)
     test = make_image_dataset(args.train_size // 4,
@@ -141,7 +145,8 @@ def run_fl(args):
                   robust=args.robust or None,
                   compute_dtype=args.compute_dtype,
                   codec=args.codec or None,
-                  local_unroll=args.local_unroll)
+                  local_unroll=args.local_unroll,
+                  alignment=args.alignment)
     h = run_federated(cnn_task(cfg), fl, parts, get_batch, test_batches,
                       latency=args.latency, log=print,
                       use_local_kernel=args.use_local_kernel)
@@ -150,6 +155,7 @@ def run_fl(args):
 
 
 def main():
+    from repro.fl import alignment as alignment_lib
     from repro.fl import attacks as attacks_lib
     from repro.fl import codec as codec_lib
     from repro.fl import methods as methods_lib
@@ -195,11 +201,13 @@ def main():
                          "1.0x2,0.5x2,0.25x2 (fl/capacity.py; "
                          "group-structured methods need width*G integer)")
     ap.add_argument("--fed-mode", default="sync",
-                    choices=["sync", "async"],
+                    choices=["sync", "async", "one_shot"],
                     help="fl mode: 'async' = buffered-async federation "
                          "(fl/async_engine.py) — --rounds counts fusion "
                          "events, --cohort-size is the in-flight "
-                         "concurrency")
+                         "concurrency; 'one_shot' = train the whole "
+                         "round budget locally and fuse exactly once "
+                         "(fl/runtime.py one_shot_config)")
     ap.add_argument("--buffer-k", type=int, default=None,
                     help="async: updates fused per event (default = the "
                          "cohort size, the sync-equivalent bound)")
@@ -235,6 +243,17 @@ def main():
     ap.add_argument("--local-unroll", type=int, default=1,
                     help="fl mode: batch this many local SGD steps into "
                          "one dispatch (scan unroll; 1 = seed-identical)")
+    ap.add_argument("--alignment", default="grouped",
+                    choices=list(alignment_lib.available()),
+                    help="fl mode: feature-alignment strategy "
+                         "(fl/alignment.py) — 'grouped' = the method's "
+                         "own structural declaration (Fed2 adaptation "
+                         "for uses_groups methods; the default), 'pan' "
+                         "= PAN position encodings on a plain net, "
+                         "'none' = unaligned plain-net control")
+    ap.add_argument("--list-capabilities", action="store_true",
+                    help="print the method x feature capability table "
+                         "(fl/compat.py) and exit")
     ap.add_argument("--use-local-kernel", action="store_true",
                     help="fl mode: route the local phase through the "
                          "fused Pallas local_step kernel (methods on "
@@ -256,6 +275,10 @@ def main():
                          "vgg9, chosen --method) on the host mesh instead "
                          "of training")
     args = ap.parse_args()
+    if args.list_capabilities:
+        from repro.fl import compat as compat_lib
+        print(compat_lib.capability_table())
+        return
     if args.dry_run and args.mode != "fl":
         ap.error("--dry-run is only supported with --mode fl")
     if args.scenario and args.mode != "fl":
@@ -277,6 +300,8 @@ def main():
                               or args.use_local_kernel):
         ap.error("--compute-dtype/--codec/--local-unroll/"
                  "--use-local-kernel are only supported with --mode fl")
+    if args.mode != "fl" and args.alignment != "grouped":
+        ap.error("--alignment is only supported with --mode fl")
     (run_lm if args.mode == "lm" else run_fl)(args)
 
 

@@ -53,6 +53,11 @@ class CNNConfig:
     input_hw: int = 32
     gn_groups: int = 8
     dtype: object = jnp.float32
+    # PAN alignment (fl/alignment.py, DESIGN.md §16): scale of the fixed
+    # per-channel position encodings added to hidden pre-activations
+    # (arxiv 2203.14666). 0.0 — the default — traces NO encoding ops, so
+    # the forward stays bit-identical to the pre-PAN program.
+    pan: float = 0.0
 
     def round_ch(self, c: int) -> int:
         g = self.fed2_groups
@@ -161,6 +166,21 @@ def _apply_norm(cfg, layer, x):
     return groupnorm_apply(layer["norm"], x, groups=groups)
 
 
+def pan_encoding(n: int, widx: int, scale: float, dtype=jnp.float32):
+    """Fixed per-channel position encoding for weight layer ``widx``
+    (PAN, arxiv 2203.14666): ``scale * sin(0.5*c + 0.7*widx)`` over
+    channel index c. Deterministic from the layer's shape and position
+    only — every client traces the IDENTICAL constant, which is the
+    point: a shared, non-trainable anchor per neuron position breaks the
+    hidden-layer permutation symmetry, so coordinate averaging of plain
+    nets pairs features by position instead of by accident. sin at an
+    irrational (in units of pi) channel frequency never repeats over
+    integer channels, so no two channels in a layer (and no two layers)
+    share an anchor."""
+    pos = jnp.arange(n, dtype=jnp.float32)
+    return (scale * jnp.sin(0.5 * pos + 0.7 * widx)).astype(dtype)
+
+
 def _grouped_flatten(x, g: int):
     """(B, H, W, C) -> (B, G * H*W*C/G) keeping group-contiguous features."""
     b, h, w, c = x.shape
@@ -185,7 +205,10 @@ def apply_cnn(params, cfg: CNNConfig, x):
             x = conv2d_apply(layer["w"], x, groups=m.groups)
         else:
             x = conv2d_apply(layer, x, stride=m.stride, groups=m.groups)
-        x = jax.nn.relu(_apply_norm(cfg, layer, x))
+        x = _apply_norm(cfg, layer, x)
+        if cfg.pan:       # PAN anchor on the pre-activation (§16)
+            x = x + pan_encoding(x.shape[-1], ci, cfg.pan, x.dtype)
+        x = jax.nn.relu(x)
         ci += 1
     if cfg.is_mobilenet:
         x = jnp.mean(x, axis=(1, 2))
@@ -198,6 +221,9 @@ def apply_cnn(params, cfg: CNNConfig, x):
     for i, (m, fc) in enumerate(zip(fc_metas, params["fcs"])):
         x = (grouped_dense_apply if m.grouped_fc else dense_apply)(fc, x)
         if m.kind != "logits":
+            if cfg.pan:   # hidden FCs only: an anchor on the logits
+                #           would bias class scores, not align features
+                x = x + pan_encoding(x.shape[-1], ci + i, cfg.pan, x.dtype)
             x = jax.nn.relu(x)
     return x[:, :cfg.n_classes]
 

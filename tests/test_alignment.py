@@ -1,0 +1,247 @@
+"""Alignment strategies (fl/alignment.py, DESIGN.md §16).
+
+The contracts behind the §16 API:
+
+  - Registry convention: ``register`` / ``get`` / ``available()``
+    mirror fl/methods.py; unknown names refuse with the enumeration.
+  - ``build_model_config`` semantics: ``grouped`` delegates to the
+    METHOD's structure declaration (the pre-§16 branch, bit-identical);
+    ``pan``/``none`` always build plain; only ``pan`` stamps a scale.
+  - THE pin: ``pan=0.0`` (the default) traces NO encoding ops — model
+    outputs are bit-identical to the pre-§16 net; ``pan>0`` changes
+    hidden activations but adds ZERO parameters and is identical on
+    every client (it's a pure function of shape and layer index).
+  - ``grouped`` == ``none`` for coordinate methods: same config, same
+    program.
+  - One-shot fusion: ``mode="one_shot"`` folds the whole budget into
+    one fat sync round — BIT-IDENTICAL to the explicit
+    rounds=1/steps=R*E*S sync run; scaffold refuses, fedma runs.
+  - Scenario plumbing: nxc2_fedavg_none builds the exact nxc2_fedavg
+    model config; records carry the alignment field.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg9
+from repro.data.synthetic import make_image_dataset, nxc_partition
+from repro.fl import alignment, methods
+from repro.fl.runtime import FLConfig, cnn_task, run_federated
+from repro.models.cnn import apply_cnn, init_cnn, pan_encoding
+
+_DS = make_image_dataset(240, n_classes=4, seed=0, noise=0.8)
+_TEST = make_image_dataset(80, n_classes=4, seed=9, noise=0.8)
+_PARTS = nxc_partition(_DS.labels, 3, 2, 4, seed=1)
+
+
+def _get_batch(sel):
+    return {"images": jnp.asarray(_DS.images[sel]),
+            "labels": jnp.asarray(_DS.labels[sel])}
+
+
+_TEST_BATCHES = [{"images": jnp.asarray(_TEST.images),
+                  "labels": jnp.asarray(_TEST.labels)}]
+
+
+def _plain():
+    return vgg9.reduced(n_classes=4, fed2_groups=0, norm="none")
+
+
+def _grouped():
+    return vgg9.reduced(n_classes=4, fed2_groups=2, decouple=1,
+                        norm="gn")
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_enumeration_and_get():
+    names = alignment.available()
+    assert names == tuple(sorted(names))
+    assert {"grouped", "pan", "none"} <= set(names)
+    for n in names:
+        s = alignment.get(n)
+        assert isinstance(s, alignment.AlignmentStrategy)
+        assert s.name == n and s.summary
+
+
+def test_unknown_strategy_refuses_with_enumeration():
+    with pytest.raises(ValueError, match="available: "):
+        alignment.get("hungarian")
+
+
+def test_strategy_declarations():
+    assert alignment.get("grouped").structural
+    assert alignment.get("grouped").pan_scale == 0.0
+    assert not alignment.get("pan").structural
+    assert alignment.get("pan").pan_scale > 0
+    s = alignment.get("none")
+    assert not s.structural and s.pan_scale == 0.0
+
+
+# ---------------------------------------------------------------------------
+# build_model_config: the single construction rule
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_delegates_to_method_structure():
+    g = alignment.get("grouped")
+    assert alignment.build_model_config(
+        g, methods.get("fed2"), _grouped, _plain) == _grouped()
+    assert alignment.build_model_config(
+        g, methods.get("fedavg"), _grouped, _plain) == _plain()
+
+
+def test_none_equals_grouped_for_coordinate_methods():
+    """For every non-structural method the explicit control row builds
+    the exact same config (and so the same traced program) as the
+    default — ``none`` only exists to say so out loud."""
+    n, g = alignment.get("none"), alignment.get("grouped")
+    for m in methods.available():
+        meth = methods.get(m)
+        if meth.uses_groups:
+            continue
+        assert (alignment.build_model_config(n, meth, _grouped, _plain)
+                == alignment.build_model_config(g, meth, _grouped,
+                                                _plain)), m
+
+
+def test_pan_builds_plain_and_stamps_scale():
+    p = alignment.get("pan")
+    cfg = alignment.build_model_config(p, methods.get("fedavg"),
+                                       _grouped, _plain)
+    assert cfg.fed2_groups == 0 and cfg.pan == p.pan_scale
+    assert dataclasses.replace(cfg, pan=0.0) == _plain()
+
+
+@pytest.mark.parametrize("strat", ["pan", "none"])
+def test_structural_methods_refuse_plain_alignment(strat):
+    with pytest.raises(ValueError, match="uses_groups"):
+        FLConfig(population=3, rounds=1, local_epochs=1,
+                 steps_per_epoch=1, batch_size=4, lr=0.1,
+                 method="fed2", seed=0, alignment=strat)
+
+
+# ---------------------------------------------------------------------------
+# PAN encodings: zero-trace at 0, deterministic, parameter-free
+# ---------------------------------------------------------------------------
+
+
+def test_pan_zero_is_bit_identical():
+    cfg0 = _plain()
+    assert cfg0.pan == 0.0  # the default: no encoding in the trace
+    cfg_explicit = dataclasses.replace(cfg0, pan=0.0)
+    params = init_cnn(jax.random.PRNGKey(0), cfg0)
+    x = jnp.asarray(_DS.images[:8])
+    np.testing.assert_array_equal(
+        np.asarray(apply_cnn(params, cfg0, x)),
+        np.asarray(apply_cnn(params, cfg_explicit, x)))
+
+
+def test_pan_nonzero_changes_hidden_activations():
+    cfg0 = _plain()
+    cfg_pan = dataclasses.replace(cfg0, pan=0.2)
+    params = init_cnn(jax.random.PRNGKey(0), cfg0)
+    x = jnp.asarray(_DS.images[:8])
+    a = np.asarray(apply_cnn(params, cfg0, x))
+    b = np.asarray(apply_cnn(params, cfg_pan, x))
+    assert not np.array_equal(a, b)
+    # and the SAME params work for both: the encoding adds zero
+    # parameters — nothing extra crosses the uplink
+    assert jax.tree_util.tree_structure(params) \
+        == jax.tree_util.tree_structure(init_cnn(jax.random.PRNGKey(0),
+                                                 cfg_pan))
+
+
+def test_pan_encoding_deterministic_and_layer_distinct():
+    e1 = np.asarray(pan_encoding(16, 3, 0.2, jnp.float32))
+    e2 = np.asarray(pan_encoding(16, 3, 0.2, jnp.float32))
+    np.testing.assert_array_equal(e1, e2)  # client-shared: pure fn
+    e_other = np.asarray(pan_encoding(16, 4, 0.2, jnp.float32))
+    assert not np.array_equal(e1, e_other)  # layers get distinct anchors
+    assert np.max(np.abs(e1)) <= 0.2 + 1e-6
+
+
+def test_pan_run_end_to_end_differs_from_none():
+    def run(alignment_name, cfg):
+        fl = FLConfig(population=3, rounds=2, local_epochs=1,
+                      steps_per_epoch=2, batch_size=8, lr=0.02,
+                      momentum=0.9, method="fedavg", seed=0,
+                      alignment=alignment_name)
+        return run_federated(cnn_task(cfg), fl, _PARTS, _get_batch,
+                             _TEST_BATCHES)
+    h_pan = run("pan", dataclasses.replace(_plain(), pan=0.2))
+    h_none = run("none", _plain())
+    a = jax.tree_util.tree_leaves(h_pan["final_params"])
+    b = jax.tree_util.tree_leaves(h_none["final_params"])
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+# ---------------------------------------------------------------------------
+# one-shot fusion
+# ---------------------------------------------------------------------------
+
+
+def test_one_shot_is_one_fat_sync_round():
+    """mode="one_shot" at rounds=R, steps=S is BIT-IDENTICAL to the
+    explicit sync run at rounds=1, steps=R*S — the whole sync engine is
+    reused, nothing is reimplemented."""
+    cfg = _plain()
+    kw = dict(population=3, local_epochs=1, batch_size=8, lr=0.02,
+              momentum=0.9, method="fedavg", seed=0)
+    one = run_federated(cnn_task(cfg),
+                        FLConfig(rounds=3, steps_per_epoch=2,
+                                 mode="one_shot", **kw),
+                        _PARTS, _get_batch, _TEST_BATCHES)
+    sync = run_federated(cnn_task(cfg),
+                         FLConfig(rounds=1, steps_per_epoch=6,
+                                  mode="sync", **kw),
+                         _PARTS, _get_batch, _TEST_BATCHES)
+    assert len(one["acc"]) == 1  # exactly ONE fusion happened
+    _leaves_equal(one["final_params"], sync["final_params"])
+    np.testing.assert_array_equal(np.asarray(one["acc"]),
+                                  np.asarray(sync["acc"]))
+
+
+def test_one_shot_scaffold_refuses_fedma_runs():
+    kw = dict(population=3, rounds=2, local_epochs=1, steps_per_epoch=2,
+              batch_size=8, lr=0.02, momentum=0.9, seed=0,
+              mode="one_shot")
+    with pytest.raises(ValueError, match="client_stateful"):
+        FLConfig(method="scaffold", **kw)
+    # host-fusion fedma composes: one round of matched averaging
+    h = run_federated(cnn_task(_plain()), FLConfig(method="fedma", **kw),
+                      _PARTS, _get_batch, _TEST_BATCHES)
+    assert len(h["acc"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# scenario plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_none_builds_the_exact_baseline_config():
+    from repro.fl import scenarios
+    assert scenarios.get("nxc2_fedavg_none").model_config() \
+        == scenarios.get("nxc2_fedavg").model_config()
+
+
+def test_scenario_specs_carry_alignment():
+    from repro.fl import scenarios
+    assert scenarios.get("nxc2_fedavg_pan").alignment == "pan"
+    assert scenarios.get("nxc2_fedavg_pan").model_config().pan > 0
+    assert scenarios.get("nxc2_fed2_oneshot").mode == "one_shot"
+    assert scenarios.get("nxc2_fedavg").alignment == "grouped"

@@ -1,0 +1,168 @@
+"""The capability matrix (fl/compat.py, DESIGN.md §16).
+
+ONE source of truth for method x feature eligibility:
+
+  - Conformance sweep: every registered method x every refusing
+    feature axis, driven through a REAL ``FLConfig`` — the config
+    constructs iff ``compat.supports(method, feature)``, and every
+    refusal names the derived flag that gates the feature.
+  - The grep-pin: no module under src/repro outside fl/compat.py and
+    fl/methods.py (the definitions) READS one of the six derived
+    eligibility flags — AST-based, so docstrings and comments stay
+    free to mention them. Raw structural flags (``uses_groups``,
+    ``host_fusion``, ``client_stateful``, ``cohort_tiling``) remain
+    legal control flow everywhere; the DERIVED flags have exactly one
+    reader.
+  - ``validate`` fires from FLConfig, ScenarioSpec AND
+    make_round_engine, so direct engine drives hit the same refusals.
+  - ``capability_matrix``/``capability_table`` cover the registry and
+    agree with ``supports``.
+"""
+import ast
+import pathlib
+
+import pytest
+
+from repro.fl import compat, methods
+from repro.fl.runtime import FLConfig
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# one kwargs dict per refusing feature axis: the smallest FLConfig
+# that turns the feature ON ("kernel" is absent by design — the
+# use_local_kernel route silently no-ops for non-supporting methods
+# instead of refusing; tests/test_engine.py pins that behavior)
+FEATURE_KW = {
+    "tiers": dict(tiers="1.0x1,0.5x2"),
+    "async": dict(mode="async"),
+    "robust": dict(robust="trimmed_mean(0.25)"),
+    "codec": dict(codec="int8"),
+    "bf16": dict(compute_dtype="bfloat16"),
+    "alignment": dict(alignment="pan"),
+    "one_shot": dict(mode="one_shot"),
+}
+
+
+def _fl(method, **kw):
+    return FLConfig(population=3, rounds=1, local_epochs=1,
+                    steps_per_epoch=1, batch_size=4, lr=0.1,
+                    method=method, seed=0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# conformance sweep: every method x every refusing feature
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("feature", sorted(FEATURE_KW))
+@pytest.mark.parametrize("method", methods.available())
+def test_config_constructs_iff_supported(method, feature):
+    meth = methods.get(method)
+    if compat.supports(meth, feature):
+        _fl(method, **FEATURE_KW[feature])  # must not raise
+    else:
+        with pytest.raises(ValueError) as exc:
+            _fl(method, **FEATURE_KW[feature])
+        # every refusal names the derived flag that gates the feature
+        assert compat.flag_name(feature) in str(exc.value), \
+            (method, feature, str(exc.value))
+
+
+@pytest.mark.parametrize("method", methods.available())
+def test_kernel_column_matches_fused_local_step(method):
+    meth = methods.get(method)
+    assert compat.supports(meth, "kernel") == meth.fused_local_step
+
+
+def test_validate_fires_from_make_round_engine():
+    """Direct engine drives (benches, dryrun) hit the same refusals as
+    FLConfig construction: smuggling an ineligible combo past
+    __post_init__ (object.__setattr__ on the frozen config — the only
+    way, since dataclasses.replace re-validates) still refuses at
+    make_round_engine."""
+    import jax
+
+    from repro.fl.engine import make_round_engine
+    from repro.fl.runtime import cnn_task
+    from repro.configs import vgg9
+
+    cfg = _fl("scaffold")
+    object.__setattr__(cfg, "compute_dtype", "bfloat16")
+    task = cnn_task(vgg9.reduced(n_classes=4, fed2_groups=0,
+                                 norm="none"))
+    params = jax.eval_shape(task.init_fn, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="mixed_precision"):
+        make_round_engine(task, cfg, params)
+
+
+# ---------------------------------------------------------------------------
+# the grep-pin: derived flags have exactly one reader
+# ---------------------------------------------------------------------------
+
+DERIVED_FLAGS = frozenset({
+    "tier_fusion", "async_eligible", "robust_fusion", "uplink_codec",
+    "mixed_precision", "fused_local_step",
+})
+# the definitions (methods.py) and the single consumer (compat.py)
+ALLOWED = {"fl/compat.py", "fl/methods.py"}
+
+
+def test_derived_flags_read_only_in_compat():
+    offenders = []
+    src = ROOT / "src" / "repro"
+    for py in src.rglob("*.py"):
+        rel = py.relative_to(src).as_posix()
+        if rel in ALLOWED:
+            continue
+        tree = ast.parse(py.read_text())
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr in DERIVED_FLAGS):
+                offenders.append((rel, node.lineno, node.attr))
+    assert not offenders, (
+        "derived eligibility flags must be read through fl/compat.py "
+        f"(supports/validate), not directly: {offenders}")
+
+
+# ---------------------------------------------------------------------------
+# matrix / table
+# ---------------------------------------------------------------------------
+
+
+def test_capability_matrix_covers_registry():
+    mat = compat.capability_matrix()
+    assert set(mat) == set(methods.available())
+    for name, row in mat.items():
+        assert set(row) == set(compat.FEATURES)
+        meth = methods.get(name)
+        for feat, ok in row.items():
+            assert ok == compat.supports(meth, feat), (name, feat)
+
+
+def test_capability_table_is_markdown_of_matrix():
+    table = compat.capability_table()
+    lines = table.strip().splitlines()
+    header = "| method | " + " | ".join(compat.FEATURES) + " |"
+    assert lines[0] == header
+    # one row per method, registry order, yes/— cells matching supports
+    assert len(lines) == 2 + len(methods.available())
+    for line, name in zip(lines[2:], methods.available()):
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        assert cells[0] == f"`{name}`"
+        meth = methods.get(name)
+        for feat, cell in zip(compat.FEATURES, cells[1:]):
+            assert cell == ("yes" if compat.supports(meth, feat)
+                            else "—"), (name, feat)
+
+
+def test_supports_rejects_unknown_feature():
+    with pytest.raises(ValueError, match="unknown capability feature"):
+        compat.supports(methods.get("fedavg"), "teleportation")
+
+
+def test_robust_codec_composition_rule_lives_in_validate():
+    """The one cross-feature rule: reducing robust rules refuse LOSSY
+    codecs (identity composes) — still enforced through validate."""
+    with pytest.raises(ValueError, match="reducing"):
+        _fl("fedavg", robust="trimmed_mean(0.25)", codec="int8")
+    _fl("fedavg", robust="trimmed_mean(0.25)", codec="identity")

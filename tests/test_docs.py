@@ -20,9 +20,10 @@ def test_design_md_exists_with_cited_sections():
     # §9 = population & participation; §10 = scenarios & evaluation;
     # §11 = heterogeneous capacity; §12 = buffered-async federation;
     # §13 = out-of-core client state; §14 = adversarial federation)
-    # §15 = fused local phase & uplink compression
+    # §15 = fused local phase & uplink compression;
+    # §16 = alignment strategies & the capability matrix
     for must in ("3", "5", "6", "8.1", "9", "10", "11", "12", "13", "14",
-                 "15", "Shape-applicability"):
+                 "15", "16", "Shape-applicability"):
         assert must in sections, (must, sections)
 
 
@@ -292,6 +293,65 @@ def test_makefile_and_ci_run_engine_bench():
     assert "bench-engine:" in mk, "Makefile lost bench-engine"
     ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
     assert "bench_engine" in ci, "CI smoke lost the engine benchmark"
+
+
+def test_design_documents_alignment_and_capability_matrix():
+    """DESIGN.md §16 must keep describing the strategy registry, the
+    PAN encoding placement, one-shot semantics and the single-source
+    capability matrix — the contracts tests/test_{alignment,compat}.py
+    pin in code."""
+    text = (ROOT / "DESIGN.md").read_text()
+    s16 = text.split("## §16")[1].split("\n## ")[0]
+    for needle in ("AlignmentStrategy", "grouped", "pan", "none",
+                   "build_model_config", "pan_encoding", "pan_scale",
+                   "one_shot_config", "client_stateful", "_FEATURES",
+                   "compat.validate", "check_alignment_support",
+                   "check_one_shot_support", "make_round_engine",
+                   "grep-pin", "capability_table",
+                   "--list-capabilities", "BIT-IDENTICAL",
+                   "bench_alignment", "fl_align", "ALIGN_MATRIX"):
+        assert needle in s16, f"DESIGN.md §16 lost {needle!r}"
+
+
+def test_readme_alignment_table_matches_registry():
+    """The README alignment table carries a row per registered strategy
+    with its summary line."""
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.fl import alignment
+    readme = (ROOT / "README.md").read_text()
+    for name in alignment.available():
+        strat = alignment.get(name)
+        row = f"| `{name}` |"
+        assert row in readme, f"README alignment table misses {row}"
+        assert strat.summary in readme, (name, strat.summary)
+
+
+def test_readme_capability_table_matches_compat():
+    """The README capability matrix is compat.capability_table()'s
+    output VERBATIM — every line of the rendered table appears."""
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.fl import compat
+    readme = (ROOT / "README.md").read_text()
+    for line in compat.capability_table().strip().splitlines():
+        assert line in readme, f"README capability table lost {line!r}"
+
+
+def test_readme_documents_alignment_flags():
+    """The README must carry the §16 CLI surface: the alignment flag,
+    the capability printout, the one-shot mode and the bench entry."""
+    readme = (ROOT / "README.md").read_text()
+    for needle in ("--alignment", "--list-capabilities",
+                   "--fed-mode one_shot", "make bench-alignment"):
+        assert needle in readme, f"README alignment docs lost {needle!r}"
+
+
+def test_makefile_and_ci_run_alignment_bench():
+    mk = (ROOT / "Makefile").read_text()
+    assert "bench-alignment:" in mk, "Makefile lost bench-alignment"
+    ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
+    assert "bench_alignment" in ci, "CI smoke lost the alignment bench"
 
 
 def test_readme_quotes_tier1_verify():

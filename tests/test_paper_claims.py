@@ -43,15 +43,17 @@ def _rec(name):
 
 def _by_protocol(method: str) -> dict:
     """protocol -> scenario name for one method, from the registry.
-    Capacity-tiered, buffered-async and adversarial scenarios are
-    excluded: the paper's ordering claims compare methods at
-    HOMOGENEOUS capacity in lockstep rounds with every client honest
-    (the adversarial orderings have their own pins below)."""
+    Capacity-tiered, buffered-async, adversarial and non-default-
+    alignment scenarios are excluded: the paper's ordering claims
+    compare methods at HOMOGENEOUS capacity in lockstep rounds with
+    every client honest under the default (grouped) alignment — the
+    adversarial and §16 alignment orderings have their own pins
+    below."""
     out = {}
     for n in scenarios_lib.available():
         s = scenarios_lib.get(n)
         if s.method == method and not s.tiers and s.mode == "sync" \
-                and not s.attack:
+                and not s.attack and s.alignment == "grouped":
             out[s.protocol] = n
     return out
 
@@ -165,6 +167,73 @@ def test_trimmed_mean_restores_learning_under_sign_flip(method):
     plain = _rec(f"nxc2_{method}_signflip20")
     assert robust.final_acc >= plain.final_acc + MARGIN, (
         method, robust.final_acc, plain.final_acc, robust.acc, plain.acc)
+
+
+# ---------------------------------------------------------------------------
+# Alignment strategies (fl/alignment.py, DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+# Measured at the pinned seed (committed scenario_*_{pan,none,oneshot}
+# records): under nxc(2) final accuracy runs grouped 0.51 >= pan 0.44
+# >= none 0.42; under dirichlet(0.5) 0.96 >= 0.91 >= 0.775. The nxc
+# pan-vs-none gap is small (0.02), so the ordering pins use plain >=
+# with no margin — the claim is the ORDER, recorded honestly either
+# way. One-shot at the same local-step budget: fed2 0.305 > fedavg
+# 0.2225, both well below multi-round fedavg's 0.42 — repeated fusion
+# matters, and structural alignment helps MOST when you fuse only once.
+
+# proto key (as in NONIID) -> the judge panel's scenario name prefix
+_ALIGN_PREFIX = {"nxc": "nxc2", "dirichlet": "dir05"}
+
+
+def test_registry_covers_the_alignment_panel():
+    """The §16 judge panel: pan + none rows under both label-skew
+    protocols, plus the one-shot pair."""
+    for prefix in _ALIGN_PREFIX.values():
+        for strat in ("pan", "none"):
+            assert f"{prefix}_fedavg_{strat}" in scenarios_lib.available()
+    for m in ("fed2", "fedavg"):
+        assert f"nxc2_{m}_oneshot" in scenarios_lib.available()
+
+
+@pytest.mark.parametrize("proto", NONIID)
+def test_alignment_ordering_grouped_pan_none(proto):
+    """THE §16 ordering under label skew: structural alignment (fed2's
+    grouped adaptation) >= PAN position encodings on a plain net >= the
+    unaligned control, on final accuracy at the pinned seed."""
+    prefix = _ALIGN_PREFIX[proto]
+    grouped = _rec(FED2[proto])
+    pan = _rec(f"{prefix}_fedavg_pan")
+    none = _rec(f"{prefix}_fedavg_none")
+    assert grouped.final_acc >= pan.final_acc >= none.final_acc, (
+        proto, grouped.final_acc, pan.final_acc, none.final_acc,
+        grouped.acc, pan.acc, none.acc)
+
+
+def test_none_control_is_bit_identical_to_the_baseline():
+    """nxc2_fedavg_none differs from nxc2_fedavg ONLY in saying
+    alignment="none" out loud — same plain net, same seed, same
+    engine: the whole trajectory must match EXACTLY."""
+    none = _rec("nxc2_fedavg_none")
+    base = _rec(FEDAVG["nxc"])
+    assert none.acc == base.acc, (none.acc, base.acc)
+    assert none.final_acc == base.final_acc
+
+
+def test_one_shot_fusion_orderings():
+    """One fusion at the full local-step budget: structural alignment
+    softens the hit (fed2 one-shot >= fedavg one-shot), and repeated
+    fusion still wins (multi-round fedavg >= fedavg one-shot) — the
+    communication/accuracy trade stated as an ordering."""
+    one_fed2 = _rec("nxc2_fed2_oneshot")
+    one_avg = _rec("nxc2_fedavg_oneshot")
+    multi = _rec(FEDAVG["nxc"])
+    assert one_fed2.final_acc >= one_avg.final_acc, (
+        one_fed2.final_acc, one_avg.final_acc)
+    assert multi.final_acc >= one_avg.final_acc, (
+        multi.final_acc, one_avg.final_acc)
+    # exactly ONE fusion happened: a single-entry trajectory
+    assert len(one_fed2.acc) == 1 and len(one_avg.acc) == 1
 
 
 @pytest.mark.parametrize("method", ("fedavg", "fed2"))
